@@ -1,0 +1,69 @@
+"""Beyond-paper: batch>1 validation of the crossover model (App. F).
+
+The paper measured batch=1 only and flagged batch scaling as its
+"highest-priority future work": the B* model predicts per-operation
+overhead amortizes with batch while kernel time grows, so tokens/s should
+scale super-linearly in the overhead-bound regime and saturate once
+compute-bound.  We sweep batch at fixed fusion level and compare the
+measured aggregate-token throughput curve against the overhead-amortization
+prediction  t(B) ≈ t_overhead + B·t_compute(1).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import print_table, save_results
+from repro.configs.bench import BENCH_05B
+from repro.models import build_model
+from repro.serving.engine import GenerationEngine
+
+BATCHES = (1, 2, 4, 8)
+
+
+def run(quick: bool = False, tokens: int = 20) -> List[Dict]:
+    n_runs, warmup = (3, 1) if quick else (8, 2)
+    if quick:
+        tokens = 8
+    model = build_model(BENCH_05B)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    rows = []
+    base_step_s = None
+    for b in BATCHES:
+        prompt = rng.integers(0, BENCH_05B.vocab_size, size=(b, 5)).astype(np.int32)
+        eng = GenerationEngine(model, params, mode="F3", batch=b,
+                               max_len=5 + tokens + 4)
+        rep = eng.benchmark(prompt, tokens, n_runs=n_runs, warmup=warmup)
+        step_s = 1.0 / rep.tok_per_s.mean          # seconds per decode step
+        if base_step_s is None:
+            base_step_s = step_s
+        agg = rep.tok_per_s.mean * b
+        rows.append({
+            "batch": b,
+            "step_ms": round(1e3 * step_s, 3),
+            "aggregate_tok_s": round(agg, 1),
+            "tok_s_scaling_vs_b1": round(agg / (BATCHES[0] / base_step_s), 2),
+            "step_slowdown_vs_b1": round(step_s / base_step_s, 2),
+            "cv_pct": round(100 * rep.tok_per_s.cv, 1),
+        })
+    # overhead-amortization read-out: if step time grows far slower than B,
+    # the op stream is overhead-bound at B=1 (the paper's claim)
+    s1, s8 = rows[0]["step_ms"], rows[-1]["step_ms"]
+    verdict = ("overhead-bound at B=1 (step time grew "
+               f"{s8/s1:.2f}× for {BATCHES[-1]}× the work)"
+               if s8 / s1 < BATCHES[-1] / 2 else
+               "compute-bound at B=1 on this host")
+    print_table("App. F validation (beyond paper): batch sweep, F3 fusion",
+                rows, ["batch", "step_ms", "aggregate_tok_s",
+                       "step_slowdown_vs_b1", "cv_pct"])
+    print(f"  → {verdict}")
+    save_results("batch", {"rows": rows, "verdict": verdict})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

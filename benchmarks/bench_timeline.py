@@ -1,0 +1,28 @@
+"""Paper Table 20 (App. M) — per-dispatch timeline decomposition.
+
+WebGPU split: encoder create / bind / dispatch / submit (submit = 40%).
+JAX-host analogue: jit python fast-path (cache lookup + arg handling) vs
+AOT executable call (runtime enqueue) vs device-execution sync tail.
+"""
+from __future__ import annotations
+
+from benchmarks.common import print_table, save_results
+from repro.core.dispatch import measure_timeline
+
+
+def run(quick: bool = False):
+    tl = measure_timeline(n_dispatches=30 if quick else 100,
+                          n_runs=3 if quick else 10)
+    rows = tl.rows()
+    total = sum(r["per_dispatch_us"] for r in rows)
+    for r in rows:
+        r["per_dispatch_us"] = round(r["per_dispatch_us"], 2)
+        r["share_pct"] = round(100 * r["per_dispatch_us"] / total, 1)
+    print_table("Table 20 analogue: per-dispatch phase timeline", rows,
+                ["phase", "per_dispatch_us", "share_pct"])
+    save_results("timeline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

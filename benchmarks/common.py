@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing: result persistence + table printing."""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import time
+from typing import Any, Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_results(name: str, payload: Any) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"results_{name}.json")
+    doc = {
+        "benchmark": name,
+        "host": platform.machine(),
+        "python": platform.python_version(),
+        "time": time.time(),
+        "data": payload,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=str)
+    return path
+
+
+def print_table(title: str, rows: List[Dict], cols: List[str]) -> None:
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.3f}"
+    return str(v)

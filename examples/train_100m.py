@@ -1,0 +1,63 @@
+"""End-to-end training driver: a ~100M-parameter dense LM for a few
+hundred steps on the synthetic pipeline, with checkpointing, auto-resume,
+failure retry and straggler monitoring — the production loop at CPU scale.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import argparse
+import logging
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.train import Trainer, TrainConfig
+from repro.train.data import DataConfig, make_dataset
+from repro.train.optimizer import AdamWConfig
+
+# ~100M params: tied embedding 50k×640 (32M) + 10 layers × ~7.5M
+CONFIG_100M = ModelConfig(
+    name="repro-100m",
+    family="dense",
+    num_layers=10,
+    d_model=640,
+    num_heads=10,
+    num_kv_heads=2,
+    d_ff=2560,
+    vocab_size=50_000,
+    head_dim=64,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    dtype="float32",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+
+    model = build_model(CONFIG_100M)
+    print(f"params: {CONFIG_100M.param_count()/1e6:.1f}M")
+    tc = TrainConfig(
+        steps=args.steps, log_every=10, ckpt_every=50,
+        ckpt_dir=args.ckpt_dir,
+        optimizer=AdamWConfig(lr=3e-4, warmup_steps=args.steps // 10,
+                              total_steps=args.steps))
+    trainer = Trainer(model, tc)
+    data = make_dataset(DataConfig(batch=args.batch, seq_len=args.seq,
+                                   vocab_size=CONFIG_100M.vocab_size),
+                        start_step=trainer.step)
+    out = trainer.train(data)
+    losses = [h["loss"] for h in out["history"]]
+    if losses:
+        print(f"trained to step {out['final_step']}: "
+              f"loss {losses[0]:.4f} → {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

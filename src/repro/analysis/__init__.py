@@ -1,0 +1,5 @@
+"""Compiled-artifact analysis: HLO parsing and roofline derivation."""
+from repro.analysis.hlo import HloCost, analyze_hlo_text
+from repro.analysis.roofline import RooflineReport, analyze_compiled
+
+__all__ = ["HloCost", "analyze_hlo_text", "RooflineReport", "analyze_compiled"]

@@ -1,0 +1,37 @@
+"""Analytic MODEL_FLOPS per (arch × shape) — the "useful compute" yardstick
+(6·N·D train / 2·N·D inference + attention terms), global across chips."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+
+
+def _attn_flops_full(cfg: ModelConfig, batch: int, seq: int) -> float:
+    """Causal self-attention QK^T + PV flops over a full sequence."""
+    if cfg.num_heads == 0:
+        return 0.0
+    n_q = cfg.num_heads * cfg.resolved_head_dim
+    win = cfg.sliding_window
+    eff = seq / 2 if win is None else min(win, seq / 2)
+    return 4.0 * cfg.num_layers * batch * seq * eff * n_q
+
+
+def _attn_flops_decode(cfg: ModelConfig, batch: int, cache_len: int) -> float:
+    if cfg.num_heads == 0:
+        return 0.0
+    n_q = cfg.num_heads * cfg.resolved_head_dim
+    win = cfg.sliding_window
+    eff = cache_len if win is None else min(win, cache_len)
+    return 4.0 * cfg.num_layers * batch * eff * n_q
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Analytic global FLOPs of one step at this shape."""
+    n_active = cfg.active_param_count()
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * b * s + 3.0 * _attn_flops_full(cfg, b, s)
+    if shape.kind == "prefill":
+        return 2.0 * n_active * b * s + _attn_flops_full(cfg, b, s)
+    # decode: one token per sequence against a cache of s entries
+    return 2.0 * n_active * b + _attn_flops_decode(cfg, b, s)

@@ -1,0 +1,57 @@
+"""Re-derive roofline records from the dry-run's persisted HLO text —
+iterate on the cost model without recompiling 60+ cells.
+
+    PYTHONPATH=src python -m repro.analysis.reanalyze results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.analysis.flops import model_flops
+from repro.analysis.hlo import analyze_hlo_text
+from repro.analysis.roofline import RooflineReport
+from repro.configs import REGISTRY, SHAPES
+
+
+def reanalyze_dir(out_dir: str) -> int:
+    n = 0
+    for hlo_path in sorted(glob.glob(os.path.join(out_dir, "*.hlo.txt"))):
+        key = os.path.basename(hlo_path)[:-len(".hlo.txt")]
+        json_path = os.path.join(out_dir, key + ".json")
+        if not os.path.exists(json_path):
+            continue
+        with open(json_path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        arch, shape_name, mesh_name = key.split("__")
+        cfg = REGISTRY[arch]
+        shape = SHAPES[shape_name]
+        chips = 512 if mesh_name == "multi" else 256
+        if mesh_name.startswith("test"):
+            chips = int(mesh_name[4:])
+        with open(hlo_path) as f:
+            hc = analyze_hlo_text(f.read())
+        report = RooflineReport(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            hlo_flops=hc.flops, dot_flops=hc.dot_flops,
+            elem_flops=hc.elem_flops, hlo_bytes=hc.traffic_bytes,
+            collective_bytes=hc.collective_bytes,
+            collective_counts=hc.collective_counts,
+            xla_flops=rec.get("xla_flops_raw"),
+            xla_bytes=rec.get("xla_bytes_raw"),
+            memory=rec.get("memory", {}),
+            model_flops=model_flops(cfg, shape))
+        rec.update(report.row())
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    print(f"re-analyzed {reanalyze_dir(out_dir)} cells in {out_dir}")

@@ -1,0 +1,91 @@
+"""Render EXPERIMENTS.md tables from dry-run result JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.report results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load(out_dir: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        key = os.path.basename(path)[:-5]
+        with open(path) as f:
+            rec = json.load(f)
+        parts = key.split("__")
+        rec["_key"] = key
+        rec.setdefault("arch", parts[0])
+        rec.setdefault("shape", parts[1] if len(parts) > 1 else "-")
+        rec.setdefault("mesh", parts[2] if len(parts) > 2 else "-")
+        rows.append(rec)
+    return rows
+
+
+def _f(v, nd=3):
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e4 or abs(v) < 1e-3:
+            return f"{v:.2e}"
+        return f"{v:.{nd}f}"
+    return str(v)
+
+
+def dryrun_table(rows: List[Dict]) -> str:
+    out = ["| arch × shape × mesh | status | lower s | compile s | "
+           "args/dev GiB | temp/dev GiB | collectives |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(f"| {r['_key']} | skipped ({r.get('reason','')[:40]}…) "
+                       "| - | - | - | - | - |")
+            continue
+        mem = r.get("memory", {})
+        cc = r.get("collective_counts", {})
+        cstr = ", ".join(f"{k}×{v}" for k, v in sorted(cc.items())) or "none"
+        out.append(
+            f"| {r['_key']} | {r.get('status')} | {_f(r.get('lower_s'), 1)} | "
+            f"{_f(r.get('compile_s'), 1)} | "
+            f"{_f(mem.get('argument_size_in_bytes', 0)/2**30, 2)} | "
+            f"{_f(mem.get('temp_size_in_bytes', 0)/2**30, 2)} | {cstr} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: List[Dict], mesh: str = "single") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | "
+           "bound s | MFU@bound | useful ratio |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_f(r['compute_s'], 4)} | "
+            f"{_f(r['memory_s'], 4)} | {_f(r['collective_s'], 4)} | "
+            f"**{r['dominant']}** | {_f(r['step_bound_s'], 4)} | "
+            f"{_f(r['mfu_at_bound'], 3)} | {_f(r['useful_flops_ratio'], 3)} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = load(out_dir)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    failed = [r for r in rows if r.get("status") == "failed"]
+    print(f"## Dry-run: {len(ok)} ok, {len(failed)} failed, "
+          f"{len(rows)-len(ok)-len(failed)} skipped\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single-pod, 256 chips)\n")
+    print(roofline_table(rows, "single"))
+    print("\n## Roofline (multi-pod, 512 chips)\n")
+    print(roofline_table(rows, "multi"))
+
+
+if __name__ == "__main__":
+    main()

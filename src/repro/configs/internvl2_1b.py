@@ -1,0 +1,27 @@
+"""InternVL2-1B [vlm] — 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655.
+
+InternViT + InternLM2 (here: Qwen2-0.5B-style LM backbone per the HF config).
+The vision frontend is a STUB: ``input_specs()`` provides precomputed patch
+embeddings. [arXiv:2404.16821; hf]
+"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    head_dim=64,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    encoder=EncoderConfig(
+        # InternViT-300M tower — stubbed: only used to size the patch-embed input
+        num_layers=24, d_model=1024, num_heads=16, d_ff=4096, num_positions=1025,
+    ),
+    source="arXiv:2404.16821; hf",
+)

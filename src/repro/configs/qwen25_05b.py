@@ -1,0 +1,22 @@
+"""Qwen2.5-0.5B-Instruct — the paper's primary test model (§3.3).
+
+494M params, 24 layers, 896 hidden, 14 heads (GQA kv=2), d_ff=4864,
+vocab 151,936.  [arXiv:2412.15115]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-0.5b",
+    family="dense",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151936,
+    head_dim=64,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="arXiv:2412.15115 (paper's primary model)",
+)

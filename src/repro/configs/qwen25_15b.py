@@ -1,0 +1,22 @@
+"""Qwen2.5-1.5B-Instruct — the paper's second test model (§3.3).
+
+1.54B params, 28 layers, 1536 hidden, 12 heads (GQA kv=2), d_ff=8960,
+vocab 151,936.  [arXiv:2412.15115]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-1.5b",
+    family="dense",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="arXiv:2412.15115 (paper's second model)",
+)

@@ -1,0 +1,26 @@
+"""RecurrentGemma-9B [hybrid] — 38L d_model=4096 16H (GQA kv=1) d_ff=12288 vocab=256000.
+
+RG-LRU + local attention, pattern (recurrent, recurrent, attention).
+[arXiv:2402.19427; unverified]
+"""
+from repro.configs.base import ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,
+    sliding_window=2048,
+    rglru=RGLRUConfig(
+        lru_width=4096,
+        conv1d_width=4,
+        attention_window=2048,
+        pattern=("recurrent", "recurrent", "attention"),
+    ),
+    source="arXiv:2402.19427; unverified",
+)

@@ -1,0 +1,42 @@
+"""Assigned input-shape sets.
+
+Every LM-family architecture is paired with the same four shapes.  ``decode_*``
+and ``long_*`` lower ``serve_step`` (one new token against a KV cache / state of
+``seq_len``), NOT ``train_step``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", seq_len=4_096, global_batch=256, kind="train")
+PREFILL_32K = ShapeSpec("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill")
+DECODE_32K = ShapeSpec("decode_32k", seq_len=32_768, global_batch=128, kind="decode")
+LONG_500K = ShapeSpec("long_500k", seq_len=524_288, global_batch=1, kind="decode")
+
+ALL_SHAPES: Tuple[ShapeSpec, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+def shapes_for(family: str) -> Tuple[ShapeSpec, ...]:
+    """Shapes applicable to an architecture family.
+
+    ``long_500k`` needs sub-quadratic attention: run for SSM/hybrid, skip for
+    pure full-attention archs (noted in DESIGN.md §4).
+    """
+    if family in ("ssm", "hybrid"):
+        return ALL_SHAPES
+    return (TRAIN_4K, PREFILL_32K, DECODE_32K)

@@ -1,0 +1,23 @@
+"""Whisper-tiny [audio] — 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865.
+
+Encoder-decoder; conv frontend is a STUB (``input_specs()`` provides
+precomputed frame embeddings, 1500 positions). [arXiv:2212.04356; unverified]
+"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    num_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    head_dim=64,
+    qkv_bias=True,
+    encoder=EncoderConfig(
+        num_layers=4, d_model=384, num_heads=6, d_ff=1536, num_positions=1500,
+    ),
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,20 @@
+"""The paper's primary contribution, as a composable JAX system:
+
+* :mod:`repro.core.opgraph`  — op-level dispatch IR (FX-graph analogue)
+* :mod:`repro.core.graphs`   — model → OpGraph builders with fusion levels
+* :mod:`repro.core.engine`   — per-op dispatch engine + whole-graph capture
+* :mod:`repro.core.dispatch` — single-op vs sequential microbenchmarks
+* :mod:`repro.core.overhead` — per-operation overhead accounting (Table 4)
+* :mod:`repro.core.crossover`— dispatch-bound crossover (Table 14)
+* :mod:`repro.core.stats`    — CI95 / CV / Welch-t benchmark statistics
+"""
+from repro.core import moe_ops  # registers MoE ops into the OpGraph registry
+from repro.core.engine import DispatchEngine, FullGraphEngine, RunStats, make_engine
+from repro.core.graphs import LEVELS, FusionSpec, build_decode_graph, build_prefill_graph
+from repro.core.opgraph import GraphBuilder, Node, OpGraph, Ref, run_graph_pure
+
+__all__ = [
+    "DispatchEngine", "FullGraphEngine", "RunStats", "make_engine",
+    "LEVELS", "FusionSpec", "build_decode_graph", "build_prefill_graph",
+    "GraphBuilder", "Node", "OpGraph", "Ref", "run_graph_pure",
+]

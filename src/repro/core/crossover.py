@@ -1,0 +1,62 @@
+"""Dispatch-bound crossover analysis — paper Appendix F (Table 14).
+
+    B* = T_overhead · throughput / (2 · d_in · d_out)
+
+Below B* an operation is overhead-bound; above, compute-bound.  The paper
+frames this as the overhead analogue of the roofline model (Williams 2009).
+We emit the table for any architecture config, at both the measured host
+throughput and the TPU-v5e projection used by the §Roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossoverRow:
+    operation: str
+    d_in: int
+    d_out: int
+    b_star: float
+
+    def regime(self, batch: int = 1) -> str:
+        return "overhead-bound" if batch < self.b_star else "compute-bound"
+
+
+def crossover_batch(overhead_s: float, throughput_flops: float,
+                    d_in: int, d_out: int) -> float:
+    return overhead_s * throughput_flops / (2.0 * d_in * d_out)
+
+
+def crossover_table(cfg: ModelConfig, *, overhead_s: float,
+                    throughput_flops: float) -> List[CrossoverRow]:
+    """Representative linear ops of the architecture (paper Table 14)."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nq = cfg.num_heads * hd
+    nkv = cfg.num_kv_heads * hd
+    ff = cfg.moe.expert_d_ff if cfg.moe is not None else cfg.d_ff
+    rows = []
+
+    def add(name, di, do):
+        rows.append(CrossoverRow(name, di, do,
+                                 crossover_batch(overhead_s, throughput_flops,
+                                                 di, do)))
+
+    add("attention Q proj", d, nq)
+    if nkv:
+        add("attention K/V proj", d, nkv)
+    if ff:
+        add("MLP up projection", d, ff)
+        add("MLP down projection", ff, d)
+    add("LM head", d, cfg.vocab_size)
+    return rows
+
+
+def as_dicts(rows: List[CrossoverRow], batch: int = 1) -> List[Dict]:
+    return [{"operation": r.operation, "dims": f"{r.d_in}×{r.d_out}",
+             "b_star": round(r.b_star, 1), "regime_at_b": r.regime(batch)}
+            for r in rows]

@@ -1,0 +1,159 @@
+"""Dispatch engines — the measurement core of the reproduction.
+
+``DispatchEngine`` executes an ``OpGraph`` one jitted XLA executable per
+compute node, reproducing torch-webgpu's dispatch-per-operation regime.
+Two synchronization modes mirror the paper's §7.2 methodology:
+
+* ``sync="every"``  — block after every dispatch: the *naive single-op*
+  benchmark that conflates sync with dispatch cost (~20× overestimate).
+* ``sync="end"``    — issue all dispatches, block once: the paper's
+  *sequential-dispatch* methodology isolating true per-dispatch cost.
+
+``FullGraphEngine`` jits the entire graph into ONE executable — the
+paper's §9.2 "graph capture/replay" ask (CUDA-Graphs analogue), natively
+available in XLA.  Numerics are identical across engines and fusion
+levels; only dispatch granularity changes.
+
+The per-dispatch timeline (Table 20 analogue) splits host cost into
+arg-prep (env gather), enqueue (async call until handle return), and sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.opgraph import Node, OpGraph, Ref, run_graph_pure
+
+
+@dataclasses.dataclass
+class RunStats:
+    wall_s: float
+    dispatches: int
+    shape_ops: int
+    sync_mode: str
+    # phase totals in seconds (Table 20 analogue)
+    arg_prep_s: float = 0.0
+    enqueue_s: float = 0.0
+    sync_s: float = 0.0
+    per_node_s: Optional[List[Tuple[str, float]]] = None
+
+    @property
+    def per_dispatch_us(self) -> float:
+        return 1e6 * self.wall_s / max(self.dispatches, 1)
+
+
+class DispatchEngine:
+    """Op-by-op executor: one cached jitted executable per (op, static)."""
+
+    def __init__(self, graph: OpGraph, *, donation: bool = False) -> None:
+        self.graph = graph
+        self.donation = donation
+        self._jitted: Dict[Any, Callable] = {}
+        for node in graph.nodes:
+            if node.category == "compute":
+                self._get_executable(node)
+
+    # ------------------------------------------------------------------
+    def _key(self, node: Node):
+        donate = node.donate if self.donation else ()
+        return (node.op, node.static, donate)
+
+    def _get_executable(self, node: Node) -> Callable:
+        key = self._key(node)
+        fn = self._jitted.get(key)
+        if fn is None:
+            donate = node.donate if self.donation else ()
+            fn = jax.jit(node.fn, donate_argnums=donate)
+            self._jitted[key] = fn
+        return fn
+
+    def warmup(self, inputs: Dict[str, Any]) -> None:
+        """Trigger compilation of every node executable (paper's warmup)."""
+        out, _ = self.run(dict(inputs), sync="end")
+        jax.block_until_ready(out)
+
+    # ------------------------------------------------------------------
+    def run(self, inputs: Dict[str, Any], *, sync: str = "end",
+            record_timeline: bool = False
+            ) -> Tuple[Dict[str, Any], RunStats]:
+        graph = self.graph
+        env: Dict[int, Any] = {}
+        per_node: Optional[List[Tuple[str, float]]] = [] if sync == "every" else None
+        arg_prep = enqueue = sync_t = 0.0
+        n_dispatch = n_shape = 0
+
+        t_start = time.perf_counter()
+        for name, idx in graph.inputs.items():
+            env[idx] = inputs[name]
+        for node in graph.nodes:
+            if node.category == "input":
+                continue
+            t0 = time.perf_counter()
+            args = [env[a.idx] if isinstance(a, Ref) else a for a in node.args]
+            if node.category == "shape":
+                # no dispatch accounting — the paper's shape-op exemption
+                env[node.idx] = node.fn(*args)
+                n_shape += 1
+                continue
+            fn = self._get_executable(node)
+            t1 = time.perf_counter()
+            out = fn(*args)
+            t2 = time.perf_counter()
+            if self.donation:
+                for di in node.donate:
+                    ref = node.args[di]
+                    if isinstance(ref, Ref):
+                        env[ref.idx] = None  # donated: drop our handle
+            env[node.idx] = out
+            n_dispatch += 1
+            if record_timeline:
+                arg_prep += t1 - t0
+                enqueue += t2 - t1
+            if sync == "every":
+                jax.block_until_ready(out)
+                t3 = time.perf_counter()
+                sync_t += t3 - t2
+                per_node.append((node.op, t3 - t0))
+        outputs = {name: env[idx] for name, idx in graph.outputs.items()}
+        if sync == "end":
+            ts = time.perf_counter()
+            jax.block_until_ready(outputs)
+            sync_t += time.perf_counter() - ts
+        wall = time.perf_counter() - t_start
+        return outputs, RunStats(wall, n_dispatch, n_shape, sync,
+                                 arg_prep, enqueue, sync_t, per_node)
+
+
+class FullGraphEngine:
+    """Whole-graph capture: ONE XLA executable — the paper's §9.2 ask."""
+
+    def __init__(self, graph: OpGraph, *, donate_inputs: bool = False) -> None:
+        self.graph = graph
+        fn = lambda inputs: run_graph_pure(graph, inputs)
+        self._fn = jax.jit(fn, donate_argnums=(0,) if donate_inputs else ())
+
+    def warmup(self, inputs: Dict[str, Any]) -> None:
+        jax.block_until_ready(self._fn(dict(inputs)))
+
+    def run(self, inputs: Dict[str, Any], *, sync: str = "end", **_
+            ) -> Tuple[Dict[str, Any], RunStats]:
+        t0 = time.perf_counter()
+        out = self._fn(inputs)
+        t1 = time.perf_counter()
+        jax.block_until_ready(out)
+        t2 = time.perf_counter()
+        return out, RunStats(t2 - t0, 1, 0, sync, 0.0, t1 - t0, t2 - t1)
+
+    def lowered(self, inputs: Dict[str, Any]):
+        return jax.jit(lambda i: run_graph_pure(self.graph, i)).lower(inputs)
+
+
+def make_engine(graph: OpGraph, mode: str, **kw):
+    """mode: "op" (per-op dispatch) or "full" (whole-graph capture)."""
+    if mode == "full":
+        return FullGraphEngine(graph, **kw)
+    return DispatchEngine(graph, **kw)

@@ -1,0 +1,331 @@
+"""Model → OpGraph builders with progressive fusion (paper §6.1, Table 5).
+
+``build_decode_graph`` emits the exact op-by-op decomposition of one
+autoregressive step for the dense/MoE transformer family — the op stream
+torch-webgpu would dispatch.  ``FusionSpec`` toggles reproduce the paper's
+progressive fusion experiment:
+
+  F0  unfused baseline
+  F1  + fused RMSNorm      (6 dispatches → 1, the paper's −240/fwd)
+  F2  + fused MLP          (gate·up·silu chain → 1, −48/fwd)
+  F3  + fused K+V proj     (2 matmuls → 1 on GQA's identical dims, −24/fwd)
+  F4  + fused QKV proj     (beyond-paper: 3 → 1)
+
+Numerics are identical at every level (same math, different granularity) —
+that is the paper's controlled-experiment design: "same kernels, fewer
+dispatches".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.opgraph import GraphBuilder, OpGraph, Ref
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionSpec:
+    rmsnorm: bool = False
+    mlp: bool = False
+    kv_proj: bool = False
+    qkv_proj: bool = False   # beyond-paper extension
+
+    @property
+    def level(self) -> str:
+        if self.qkv_proj:
+            return "F4"
+        if self.kv_proj:
+            return "F3"
+        if self.mlp:
+            return "F2"
+        if self.rmsnorm:
+            return "F1"
+        return "F0"
+
+
+LEVELS: Dict[str, FusionSpec] = {
+    "F0": FusionSpec(),
+    "F1": FusionSpec(rmsnorm=True),
+    "F2": FusionSpec(rmsnorm=True, mlp=True),
+    "F3": FusionSpec(rmsnorm=True, mlp=True, kv_proj=True),
+    "F4": FusionSpec(rmsnorm=True, mlp=True, kv_proj=True, qkv_proj=True),
+}
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(x)
+
+
+def _rope_tables(cfg: ModelConfig, max_len: int):
+    hd = cfg.resolved_head_dim
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(0, hd, 2) / hd))
+    ang = np.arange(max_len)[:, None] * inv[None, :]
+    cos = np.concatenate([np.cos(ang), np.cos(ang)], axis=-1).astype(np.float32)
+    sin = np.concatenate([np.sin(ang), np.sin(ang)], axis=-1).astype(np.float32)
+    return cos, sin
+
+
+def _emit_rmsnorm(g: GraphBuilder, x: Ref, w, eps: float, fused: bool,
+                  tag: str) -> Ref:
+    """6-op decomposition (pow → mean → +eps → rsqrt → ·x → ·w) or 1 fused."""
+    if fused:
+        return g.op("fused_rmsnorm", x, w, eps=eps, tag=tag)
+    sq = g.op("pow", x, tag=tag)
+    mu = g.op("mean", sq, tag=tag)
+    ve = g.op("add_eps", mu, eps=eps, tag=tag)
+    r = g.op("rsqrt", ve, tag=tag)
+    xn = g.op("mul", x, r, tag=tag)
+    return g.op("mul", xn, w.astype(np.float32), tag=tag)
+
+
+def _emit_rope(g: GraphBuilder, x: Ref, cos: Ref, sin: Ref, tag: str) -> Ref:
+    """neg + concat (rotate-half) + 2 mul + add — the paper's rotary ops."""
+    x1 = g.op("split_half", x, part=0, tag=tag)
+    x2 = g.op("split_half", x, part=1, tag=tag)
+    n2 = g.op("neg", x2, tag=tag)
+    rot = g.op("concat", n2, x1, axis=-1, tag=tag)
+    a = g.op("mul", x, cos, tag=tag)
+    b = g.op("mul", rot, sin, tag=tag)
+    return g.op("add", a, b, tag=tag)
+
+
+def _layer_weights(params: Dict[str, Any], i: int) -> Dict[str, np.ndarray]:
+    return jax.tree.map(lambda a: _np(a[i]), params["blocks"])
+
+
+def _emit_moe_ffn(g: GraphBuilder, cfg: ModelConfig, x: Ref,
+                  w: Dict[str, np.ndarray], fused: bool, tag: str) -> Ref:
+    """MoE FFN ops — a beyond-paper extension of the dispatch accounting.
+
+    Unfused: router mm, softmax, top-k, and per-projection grouped einsums.
+    Fused: the expert SwiGLU chain collapses like the dense MLP fusion.
+    """
+    from repro.core import moe_ops  # registered lazily to avoid cycles
+    logits = g.op("matmul", x, w["ffn"]["router"], tag=tag)
+    probs = g.op("softmax", logits, tag=tag)
+    if fused:
+        return g.op("moe_ffn_fused", x, probs, w["ffn"]["w_gate"],
+                    w["ffn"]["w_up"], w["ffn"]["w_down"],
+                    top_k=cfg.moe.top_k, tag=tag)
+    xe = g.op("moe_dispatch", x, probs, top_k=cfg.moe.top_k,
+              num_experts=cfg.moe.num_experts, tag=tag)
+    ge = g.op("moe_mm", xe, w["ffn"]["w_gate"], tag=tag)
+    ue = g.op("moe_mm", xe, w["ffn"]["w_up"], tag=tag)
+    se = g.op("silu", ge, tag=tag)
+    he = g.op("mul", se, ue, tag=tag)
+    ye = g.op("moe_mm_down", he, w["ffn"]["w_down"], tag=tag)
+    return g.op("moe_combine", ye, x, probs, top_k=cfg.moe.top_k, tag=tag)
+
+
+def build_decode_graph(params: Dict[str, Any], cfg: ModelConfig, *,
+                       batch: int, max_len: int,
+                       fusion: FusionSpec = FusionSpec()) -> OpGraph:
+    """One autoregressive decode step as an explicit dispatch stream.
+
+    Inputs:  tokens (B,1) int32, pos () int32, k_cache/v_cache per layer.
+    Outputs: next_token (B,1) int32 (device-side argmax), updated caches.
+    """
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    eps = cfg.rms_eps
+    g = GraphBuilder()
+
+    tokens = g.input("tokens", (batch, 1), jnp.int32)
+    pos = g.input("pos", (), jnp.int32)
+    caches = []
+    for i in range(cfg.num_layers):
+        caches.append((
+            g.input(f"k_cache_{i}", (batch, max_len, cfg.num_kv_heads, hd),
+                    jnp.dtype(cfg.dtype)),
+            g.input(f"v_cache_{i}", (batch, max_len, cfg.num_kv_heads, hd),
+                    jnp.dtype(cfg.dtype)),
+        ))
+
+    cos_t, sin_t = _rope_tables(cfg, max_len)
+    length = g.op("add", pos, np.int32(1), tag="length")
+
+    x = g.op("embed", _np(params["embed"]), tokens, tag="embed")
+    for i in range(cfg.num_layers):
+        w = _layer_weights(params, i)
+        t = f"layer{i}"
+        # --- attention ----------------------------------------------------
+        xn = _emit_rmsnorm(g, x, w["attn_norm"], eps, fusion.rmsnorm,
+                           f"{t}/attn_norm")
+        wa = w["attn"]
+        has_bias = "bq" in wa
+        if fusion.qkv_proj:
+            wqkv = np.concatenate([wa["wq"], wa["wk"], wa["wv"]], axis=-1)
+            if has_bias:
+                bqkv = np.concatenate([wa["bq"], wa["bk"], wa["bv"]])
+                qkv = g.op("fused_kv", xn, wqkv, bqkv, tag=f"{t}/qkv")
+            else:
+                qkv = g.op("fused_kv_nobias", xn, wqkv, tag=f"{t}/qkv")
+            q = g.op("slice_last", qkv, start=0, size=nq, tag=t)
+            k = g.op("slice_last", qkv, start=nq, size=nkv, tag=t)
+            v = g.op("slice_last", qkv, start=nq + nkv, size=nkv, tag=t)
+        else:
+            q = g.op("matmul", xn, wa["wq"], tag=f"{t}/q_proj")
+            if has_bias:
+                q = g.op("add", q, wa["bq"], tag=f"{t}/q_bias")
+            if fusion.kv_proj:
+                # GQA K and V have identical dims — the paper's K+V merge
+                wkv = np.concatenate([wa["wk"], wa["wv"]], axis=-1)
+                if has_bias:
+                    bkv = np.concatenate([wa["bk"], wa["bv"]])
+                    kvp = g.op("fused_kv", xn, wkv, bkv, tag=f"{t}/kv_proj")
+                else:
+                    kvp = g.op("fused_kv_nobias", xn, wkv, tag=f"{t}/kv_proj")
+                k = g.op("slice_last", kvp, start=0, size=nkv, tag=t)
+                v = g.op("slice_last", kvp, start=nkv, size=nkv, tag=t)
+            else:
+                k = g.op("matmul", xn, wa["wk"], tag=f"{t}/k_proj")
+                v = g.op("matmul", xn, wa["wv"], tag=f"{t}/v_proj")
+                if has_bias:
+                    k = g.op("add", k, wa["bk"], tag=f"{t}/k_bias")
+                    v = g.op("add", v, wa["bv"], tag=f"{t}/v_bias")
+        q = g.op("reshape", q, shape=(batch, 1, cfg.num_heads, hd), tag=t)
+        k = g.op("reshape", k, shape=(batch, 1, cfg.num_kv_heads, hd), tag=t)
+        v = g.op("reshape", v, shape=(batch, 1, cfg.num_kv_heads, hd), tag=t)
+        if cfg.qk_norm:
+            q = _emit_rmsnorm(g, q, wa["q_norm"], eps, fusion.rmsnorm,
+                              f"{t}/q_norm")
+            k = _emit_rmsnorm(g, k, wa["k_norm"], eps, fusion.rmsnorm,
+                              f"{t}/k_norm")
+        if i == 0:
+            cos = g.op("gather_rows", cos_t, pos, tag="rope_cos")
+            sin = g.op("gather_rows", sin_t, pos, tag="rope_sin")
+        q = _emit_rope(g, q, cos, sin, f"{t}/rope_q")
+        k = _emit_rope(g, k, cos, sin, f"{t}/rope_k")
+        k = g.op("cast", k, dtype=cfg.dtype, tag=t)
+        kc, vc = caches[i]
+        kc = g.op("cache_update", kc, k, pos, donate=(0,), tag=f"{t}/k_cache")
+        vc = g.op("cache_update", vc, v, pos, donate=(0,), tag=f"{t}/v_cache")
+        g.output(f"k_cache_{i}", kc)
+        g.output(f"v_cache_{i}", vc)
+        o = g.op("sdpa", q, kc, vc, length, tag=f"{t}/sdpa")
+        o = g.op("reshape", o, shape=(batch, 1, nq), tag=t)
+        o = g.op("matmul", o, wa["wo"], tag=f"{t}/o_proj")
+        x = g.op("add", x, o, tag=f"{t}/resid1")
+        # --- ffn ------------------------------------------------------------
+        xn = _emit_rmsnorm(g, x, w["ffn_norm"], eps, fusion.rmsnorm,
+                           f"{t}/ffn_norm")
+        if cfg.moe is not None:
+            f = _emit_moe_ffn(g, cfg, xn, w, fusion.mlp, f"{t}/moe")
+        elif fusion.mlp:
+            h = g.op("fused_mlp", xn, w["ffn"]["w_gate"], w["ffn"]["w_up"],
+                     tag=f"{t}/mlp_fused")
+            f = g.op("matmul", h, w["ffn"]["w_down"], tag=f"{t}/mlp_down")
+        else:
+            gate = g.op("matmul", xn, w["ffn"]["w_gate"], tag=f"{t}/mlp_gate")
+            up = g.op("matmul", xn, w["ffn"]["w_up"], tag=f"{t}/mlp_up")
+            s = g.op("silu", gate, tag=f"{t}/mlp_silu")
+            h = g.op("mul", s, up, tag=f"{t}/mlp_mul")
+            f = g.op("matmul", h, w["ffn"]["w_down"], tag=f"{t}/mlp_down")
+        x = g.op("add", x, f, tag=f"{t}/resid2")
+
+    x = _emit_rmsnorm(g, x, _np(params["final_norm"]), eps, fusion.rmsnorm,
+                      "final_norm")
+    head = (_np(params["embed"]).T if cfg.tie_embeddings
+            else _np(params["lm_head"]))
+    logits = g.op("matmul", x, head, tag="lm_head")
+    nxt = g.op("argmax", logits, tag="argmax")
+    g.output("next_token", nxt)
+    g.output("logits", logits)
+    return g.build(kind="decode", arch=cfg.name, fusion=fusion.level,
+                   batch=batch, max_len=max_len)
+
+
+def build_prefill_graph(params: Dict[str, Any], cfg: ModelConfig, *,
+                        batch: int, prompt_len: int, max_len: int,
+                        fusion: FusionSpec = FusionSpec()) -> OpGraph:
+    """Prompt processing (TTFT's prefill half) as a dispatch stream."""
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    eps = cfg.rms_eps
+    s = prompt_len
+    g = GraphBuilder()
+    tokens = g.input("tokens", (batch, s), jnp.int32)
+    cos_t, sin_t = _rope_tables(cfg, max_len)
+    positions = np.arange(s, dtype=np.int32)
+
+    x = g.op("embed", _np(params["embed"]), tokens, tag="embed")
+    for i in range(cfg.num_layers):
+        w = _layer_weights(params, i)
+        t = f"layer{i}"
+        xn = _emit_rmsnorm(g, x, w["attn_norm"], eps, fusion.rmsnorm,
+                           f"{t}/attn_norm")
+        wa = w["attn"]
+        has_bias = "bq" in wa
+        q = g.op("matmul", xn, wa["wq"], tag=f"{t}/q_proj")
+        if has_bias:
+            q = g.op("add", q, wa["bq"], tag=f"{t}/q_bias")
+        if fusion.kv_proj:
+            wkv = np.concatenate([wa["wk"], wa["wv"]], axis=-1)
+            if has_bias:
+                bkv = np.concatenate([wa["bk"], wa["bv"]])
+                kvp = g.op("fused_kv", xn, wkv, bkv, tag=f"{t}/kv_proj")
+            else:
+                kvp = g.op("fused_kv_nobias", xn, wkv, tag=f"{t}/kv_proj")
+            k = g.op("slice_last", kvp, start=0, size=nkv, tag=t)
+            v = g.op("slice_last", kvp, start=nkv, size=nkv, tag=t)
+        else:
+            k = g.op("matmul", xn, wa["wk"], tag=f"{t}/k_proj")
+            v = g.op("matmul", xn, wa["wv"], tag=f"{t}/v_proj")
+            if has_bias:
+                k = g.op("add", k, wa["bk"], tag=f"{t}/k_bias")
+                v = g.op("add", v, wa["bv"], tag=f"{t}/v_bias")
+        q = g.op("reshape", q, shape=(batch, s, cfg.num_heads, hd), tag=t)
+        k = g.op("reshape", k, shape=(batch, s, cfg.num_kv_heads, hd), tag=t)
+        v = g.op("reshape", v, shape=(batch, s, cfg.num_kv_heads, hd), tag=t)
+        if cfg.qk_norm:
+            q = _emit_rmsnorm(g, q, wa["q_norm"], eps, fusion.rmsnorm,
+                              f"{t}/q_norm")
+            k = _emit_rmsnorm(g, k, wa["k_norm"], eps, fusion.rmsnorm,
+                              f"{t}/k_norm")
+        if i == 0:
+            cos = g.op("gather_rows", cos_t, positions, tag="rope_cos")
+            sin = g.op("gather_rows", sin_t, positions, tag="rope_sin")
+            cos = g.op("reshape", cos, shape=(s, 1, hd), tag="rope_cos")
+            sin = g.op("reshape", sin, shape=(s, 1, hd), tag="rope_sin")
+        q = _emit_rope(g, q, cos, sin, f"{t}/rope_q")
+        k = _emit_rope(g, k, cos, sin, f"{t}/rope_k")
+        k = g.op("cast", k, dtype=cfg.dtype, tag=t)
+        v = g.op("cast", v, dtype=cfg.dtype, tag=t)
+        g.output(f"k_prefix_{i}", k)
+        g.output(f"v_prefix_{i}", v)
+        o = g.op("sdpa_prefill", q, k, v, tag=f"{t}/sdpa")
+        o = g.op("reshape", o, shape=(batch, s, nq), tag=t)
+        o = g.op("matmul", o, wa["wo"], tag=f"{t}/o_proj")
+        x = g.op("add", x, o, tag=f"{t}/resid1")
+        xn = _emit_rmsnorm(g, x, w["ffn_norm"], eps, fusion.rmsnorm,
+                           f"{t}/ffn_norm")
+        if cfg.moe is not None:
+            f = _emit_moe_ffn(g, cfg, xn, w, fusion.mlp, f"{t}/moe")
+        elif fusion.mlp:
+            h = g.op("fused_mlp", xn, w["ffn"]["w_gate"], w["ffn"]["w_up"],
+                     tag=f"{t}/mlp_fused")
+            f = g.op("matmul", h, w["ffn"]["w_down"], tag=f"{t}/mlp_down")
+        else:
+            gate = g.op("matmul", xn, w["ffn"]["w_gate"], tag=f"{t}/mlp_gate")
+            up = g.op("matmul", xn, w["ffn"]["w_up"], tag=f"{t}/mlp_up")
+            sl = g.op("silu", gate, tag=f"{t}/mlp_silu")
+            h = g.op("mul", sl, up, tag=f"{t}/mlp_mul")
+            f = g.op("matmul", h, w["ffn"]["w_down"], tag=f"{t}/mlp_down")
+        x = g.op("add", x, f, tag=f"{t}/resid2")
+
+    xl = g.op("slice_seq_last", x, tag="last_token")
+    xl = _emit_rmsnorm(g, xl, _np(params["final_norm"]), eps, fusion.rmsnorm,
+                       "final_norm")
+    head = (_np(params["embed"]).T if cfg.tie_embeddings
+            else _np(params["lm_head"]))
+    logits = g.op("matmul", xl, head, tag="lm_head")
+    nxt = g.op("argmax", logits, tag="argmax")
+    g.output("next_token", nxt)
+    g.output("logits", logits)
+    return g.build(kind="prefill", arch=cfg.name, fusion=fusion.level,
+                   batch=batch, prompt_len=s, max_len=max_len)

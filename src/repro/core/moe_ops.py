@@ -1,0 +1,104 @@
+"""MoE ops for the dispatch-graph — a beyond-paper extension.
+
+The paper characterized dense models only; MoE routing adds dispatches the
+paper never saw (router matmul, softmax, top-k, dispatch gather, three
+grouped expert einsums, combine scatter).  These ops register themselves
+into the ``OpGraph`` registry so MoE architectures participate in the same
+fusion-level experiments.
+
+``moe_dispatch``/``moe_combine`` recompute the (deterministic) routing
+rather than threading multi-output nodes through the single-output IR —
+the routing math is negligible next to the expert matmuls.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import opgraph
+from repro.models.moe import capacity
+
+
+def _routing(x2d, probs2d, top_k: int, num_experts: int, cap: int):
+    t = x2d.shape[0]
+    top_p, top_i = jax.lax.top_k(probs2d, top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    flat_e = top_i.reshape(t * top_k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    group_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(t * top_k) - group_start
+    keep = pos_in_e < cap
+    safe_pos = jnp.where(keep, pos_in_e, cap)
+    slot_token = order // top_k
+    slot_gate = top_p.reshape(t * top_k)[order]
+    tok = jnp.zeros((num_experts, cap), jnp.int32).at[sorted_e, safe_pos].set(
+        slot_token, mode="drop")
+    gate = jnp.zeros((num_experts, cap), jnp.float32).at[sorted_e, safe_pos].set(
+        slot_gate, mode="drop")
+    return tok, gate
+
+
+def moe_dispatch(x, probs, *, top_k, num_experts):
+    b, s, d = x.shape
+    t = b * s
+    cap = capacity(t, num_experts, top_k)
+    tok, _ = _routing(x.reshape(t, d), probs.reshape(t, -1), top_k,
+                      num_experts, cap)
+    return x.reshape(t, d)[tok]                       # (E, C, d)
+
+
+def moe_mm(xe, w):
+    return jnp.einsum("ecd,edf->ecf", xe, w,
+                      preferred_element_type=jnp.float32).astype(xe.dtype)
+
+
+def moe_mm_down(he, w):
+    return jnp.einsum("ecf,efd->ecd", he, w,
+                      preferred_element_type=jnp.float32).astype(he.dtype)
+
+
+def moe_combine(ye, x, probs, *, top_k):
+    b, s, d = x.shape
+    t = b * s
+    num_experts = ye.shape[0]
+    cap = ye.shape[1]
+    tok, gate = _routing(x.reshape(t, d), probs.reshape(t, -1), top_k,
+                         num_experts, cap)
+    y = jnp.zeros((t, d), jnp.float32).at[tok].add(
+        ye.astype(jnp.float32) * gate[..., None])
+    return y.astype(x.dtype).reshape(b, s, d)
+
+
+def moe_ffn_fused(x, probs, wg, wu, wd, *, top_k):
+    """Dispatch + SwiGLU experts + combine in one executable (fusion level)."""
+    b, s, d = x.shape
+    t = b * s
+    num_experts = wg.shape[0]
+    cap = capacity(t, num_experts, top_k)
+    tok, gate = _routing(x.reshape(t, d), probs.reshape(t, -1), top_k,
+                         num_experts, cap)
+    xe = x.reshape(t, d)[tok]
+    g = jnp.einsum("ecd,edf->ecf", xe, wg, preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xe, wu, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, wd, preferred_element_type=jnp.float32)
+    y = jnp.zeros((t, d), jnp.float32).at[tok].add(ye * gate[..., None])
+    return y.astype(x.dtype).reshape(b, s, d)
+
+
+# --- registry hookup --------------------------------------------------------
+opgraph.OPS.update({
+    "moe_dispatch": moe_dispatch,
+    "moe_mm": moe_mm,
+    "moe_mm_down": moe_mm_down,
+    "moe_combine": moe_combine,
+    "moe_ffn_fused": moe_ffn_fused,
+})
+opgraph.SHAPE_OPS.setdefault("slice_seq_last", lambda x: x[:, -1:, :])
+opgraph.TAXONOMY.update({
+    "moe_mm": "linear", "moe_mm_down": "linear", "moe_ffn_fused": "linear",
+    "moe_dispatch": "other", "moe_combine": "other",
+})

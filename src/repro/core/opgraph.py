@@ -1,0 +1,277 @@
+"""Op-level graph IR — the FX-graph analogue (paper §2.2, Appendix B).
+
+torch-webgpu translated ``torch.compile`` FX graphs into one WebGPU dispatch
+per compute node.  Here the same role is played by an ``OpGraph``: each
+compute node becomes one *separately jitted XLA executable*, so executing a
+graph node-by-node reproduces the paper's dispatch-per-operation regime
+(level F0), and fusion passes that collapse node patterns reproduce the
+paper's fusion levels (Table 5).  Shape nodes (reshape/transpose/split) cost
+no dispatch — exactly the paper's "shape operations (241) don't require
+them" observation.
+
+Node taxonomy mirrors Table 10: matmul / mul / add / sdpa / silu / rmsnorm
+components (pow, mean, rsqrt) / concat (cache + rotary) / other.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import Counter
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# op registry: canonical callables, one per op name
+# ---------------------------------------------------------------------------
+
+def _sdpa(q, k, v, length):
+    """Decode attention against a cache — one dispatch, like the paper's SDPA."""
+    from repro.models import layers as L
+    return L.decode_attention(q, k, v, length)
+
+
+def _sdpa_prefill(q, k, v):
+    from repro.models import layers as L
+    return L.causal_attention(q, k, v)
+
+
+# Fused-op backend: "xla" (jnp bodies fused by XLA — the wall-clock path on
+# the CPU host) or "pallas" (the hand-written TPU kernels from
+# repro.kernels — the production TPU path; interpret-mode on CPU, so used
+# for correctness, not speed, in this container).
+_FUSED_BACKEND = "xla"
+
+
+def set_fused_backend(name: str) -> None:
+    global _FUSED_BACKEND
+    assert name in ("xla", "pallas"), name
+    _FUSED_BACKEND = name
+
+
+def get_fused_backend() -> str:
+    return _FUSED_BACKEND
+
+
+def _fused_rmsnorm(x, w, *, eps):
+    if _FUSED_BACKEND == "pallas":
+        from repro.kernels import fused_rmsnorm as k_rmsnorm
+        return k_rmsnorm(x, w, eps=eps)
+    from repro.models import layers as L
+    return L.rmsnorm(x, w, eps)
+
+
+def _fused_mlp(x, wg, wu):
+    if _FUSED_BACKEND == "pallas":
+        from repro.kernels import fused_mlp as k_mlp
+        return k_mlp(x, wg, wu)
+    g = jnp.einsum("...d,df->...f", x, wg, preferred_element_type=jnp.float32)
+    u = jnp.einsum("...d,df->...f", x, wu, preferred_element_type=jnp.float32)
+    return (jax.nn.silu(g) * u).astype(x.dtype)
+
+
+def _fused_kv(x, wkv, bkv):
+    if _FUSED_BACKEND == "pallas":
+        # kv_proj_pallas consumes the concatenated [Wk|Wv] directly
+        from repro.kernels.common import pad_dim, round_up, use_interpret
+        from repro.kernels.fused_kv_proj.kernel import kv_proj_pallas
+        shape = x.shape
+        d, n = wkv.shape
+        rows = 1
+        for s in shape[:-1]:
+            rows *= s
+        bm, bn, bk = 128, 128, 128
+        mp, kp, np_ = round_up(rows, bm), round_up(d, bk), round_up(n, bn)
+        out = kv_proj_pallas(
+            pad_dim(pad_dim(x.reshape(rows, d), 0, mp), 1, kp),
+            pad_dim(pad_dim(jnp.asarray(wkv), 0, kp), 1, np_),
+            pad_dim(jnp.asarray(bkv), 0, np_),
+            block_m=bm, block_n=bn, block_k=bk, interpret=use_interpret())
+        return out[:rows, :n].reshape(*shape[:-1], n)
+    y = jnp.einsum("...d,df->...f", x, wkv, preferred_element_type=jnp.float32)
+    return (y + bkv.astype(jnp.float32)).astype(x.dtype)
+
+
+def _fused_kv_nobias(x, wkv):
+    return jnp.einsum("...d,df->...f", x, wkv,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+OPS: Dict[str, Callable] = {
+    # --- Table 10 categories -------------------------------------------
+    "matmul": lambda x, w: jnp.einsum(
+        "...d,df->...f", x, w, preferred_element_type=jnp.float32).astype(x.dtype),
+    "add": lambda a, b: a + b,
+    "mul": lambda a, b: a * b,
+    "pow": lambda x: jnp.square(x.astype(jnp.float32)),
+    "mean": lambda x: jnp.mean(x, axis=-1, keepdims=True),
+    "add_eps": lambda x, *, eps: x + eps,
+    "rsqrt": jax.lax.rsqrt,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "neg": lambda x: -x,
+    "concat": lambda a, b, *, axis: jnp.concatenate([a, b], axis=axis),
+    "embed": lambda table, ids: jnp.take(table, ids, axis=0),
+    "gather_rows": lambda table, idx: jnp.take(table, idx, axis=0),
+    "argmax": lambda x: jnp.argmax(x, axis=-1).astype(jnp.int32),
+    "softmax": lambda x: jax.nn.softmax(x.astype(jnp.float32), axis=-1),
+    "cast": lambda x, *, dtype: x.astype(dtype),
+    "cache_update": lambda cache, val, pos: jax.lax.dynamic_update_slice(
+        cache, val, (0, pos, 0, 0)),
+    "sdpa": _sdpa,
+    "sdpa_prefill": _sdpa_prefill,
+    # --- fused ops (Table 5 / §6.1) ------------------------------------
+    "fused_rmsnorm": _fused_rmsnorm,
+    "fused_mlp": _fused_mlp,
+    "fused_kv": _fused_kv,
+    "fused_kv_nobias": _fused_kv_nobias,
+    # --- top-k / sampling ----------------------------------------------
+    "top_k": lambda x, *, k: jax.lax.top_k(x, k)[0],
+}
+
+# shape-only ops — no dispatch (paper §2.2)
+SHAPE_OPS: Dict[str, Callable] = {
+    "reshape": lambda x, *, shape: jnp.reshape(x, shape),
+    "transpose": lambda x, *, perm: jnp.transpose(x, perm),
+    "split_half": lambda x, *, part: jnp.split(x, 2, axis=-1)[part],
+    "slice_last": lambda x, *, start, size: jax.lax.slice_in_dim(
+        x, start, start + size, axis=-1),
+    "slice_seq_last": lambda x: x[:, -1:, :],
+    "broadcast_pos": lambda p, *, batch: jnp.broadcast_to(p, (batch, 1)),
+}
+
+# Table 10 bucket per op name
+TAXONOMY: Dict[str, str] = {
+    "matmul": "linear", "fused_kv": "linear", "fused_kv_nobias": "linear",
+    "fused_mlp": "linear",
+    "mul": "multiply",
+    "add": "add", "add_eps": "add",
+    "sdpa": "sdpa", "sdpa_prefill": "sdpa",
+    "silu": "silu", "gelu": "silu",
+    "pow": "rmsnorm_comp", "mean": "rmsnorm_comp", "rsqrt": "rmsnorm_comp",
+    "fused_rmsnorm": "rmsnorm_comp",
+    "concat": "concat", "cache_update": "concat",
+}
+_OTHER = "other"
+
+
+# ---------------------------------------------------------------------------
+# graph structures
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Ref:
+    idx: int
+
+
+@dataclasses.dataclass
+class Node:
+    idx: int
+    op: str
+    category: str                     # compute | shape | input
+    args: Tuple[Any, ...]             # Ref | concrete array | python scalar
+    static: Tuple[Tuple[str, Any], ...]
+    aval: jax.ShapeDtypeStruct
+    tag: str = ""
+    donate: Tuple[int, ...] = ()      # positional args safe to donate
+
+    @property
+    def fn(self) -> Callable:
+        base = OPS.get(self.op) or SHAPE_OPS[self.op]
+        if self.static:
+            return functools.partial(base, **dict(self.static))
+        return base
+
+
+@dataclasses.dataclass
+class OpGraph:
+    nodes: List[Node]
+    inputs: Dict[str, int]
+    outputs: Dict[str, int]
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # -- accounting (paper Table 10 / §4.3) ----------------------------
+    def compute_nodes(self) -> List[Node]:
+        return [n for n in self.nodes if n.category == "compute"]
+
+    def num_dispatches(self) -> int:
+        return len(self.compute_nodes())
+
+    def num_shape_ops(self) -> int:
+        return sum(1 for n in self.nodes if n.category == "shape")
+
+    def taxonomy(self) -> Counter:
+        c: Counter = Counter()
+        for n in self.compute_nodes():
+            c[TAXONOMY.get(n.op, _OTHER)] += 1
+        return c
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "total_nodes": len(self.nodes),
+            "compute_ops": self.num_dispatches(),
+            "shape_ops": self.num_shape_ops(),
+            "inputs": len(self.inputs),
+            "taxonomy": dict(self.taxonomy()),
+        }
+
+
+class GraphBuilder:
+    """Records ops into an ``OpGraph``; shapes inferred via eval_shape."""
+
+    def __init__(self) -> None:
+        self.nodes: List[Node] = []
+        self.inputs: Dict[str, int] = {}
+        self.outputs: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------
+    def _aval(self, x) -> jax.ShapeDtypeStruct:
+        if isinstance(x, Ref):
+            return self.nodes[x.idx].aval
+        arr = jnp.asarray(x)
+        return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+    def input(self, name: str, shape, dtype) -> Ref:
+        node = Node(len(self.nodes), "input", "input", (), (),
+                    jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype)), name)
+        self.nodes.append(node)
+        self.inputs[name] = node.idx
+        return Ref(node.idx)
+
+    def op(self, op: str, *args, tag: str = "", donate: Tuple[int, ...] = (),
+           **static) -> Ref:
+        category = "shape" if op in SHAPE_OPS else "compute"
+        base = OPS.get(op) or SHAPE_OPS[op]
+        fn = functools.partial(base, **static) if static else base
+        avals = [self._aval(a) for a in args]
+        out_aval = jax.eval_shape(fn, *avals)
+        node = Node(len(self.nodes), op, category, tuple(args),
+                    tuple(sorted(static.items())), out_aval, tag, donate)
+        self.nodes.append(node)
+        return Ref(node.idx)
+
+    def output(self, name: str, ref: Ref) -> None:
+        self.outputs[name] = ref.idx
+
+    def build(self, **meta) -> OpGraph:
+        return OpGraph(self.nodes, dict(self.inputs), dict(self.outputs),
+                       meta)
+
+
+# ---------------------------------------------------------------------------
+# pure execution (used for correctness oracles and the FULL jit mode)
+# ---------------------------------------------------------------------------
+
+def run_graph_pure(graph: OpGraph, inputs: Dict[str, Any]) -> Dict[str, Any]:
+    """Execute the graph functionally (traceable → whole-graph jit)."""
+    env: Dict[int, Any] = {}
+    for name, idx in graph.inputs.items():
+        env[idx] = inputs[name]
+    for node in graph.nodes:
+        if node.category == "input":
+            continue
+        args = [env[a.idx] if isinstance(a, Ref) else a for a in node.args]
+        env[node.idx] = node.fn(*args)
+    return {name: env[idx] for name, idx in graph.outputs.items()}

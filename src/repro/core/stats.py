@@ -1,0 +1,140 @@
+"""Benchmark statistics matching the paper's protocol (§3.3–§3.4).
+
+Implements mean ± std, 95% CI via the t-distribution, coefficient of
+variation, and Welch's t-test — from scratch (no scipy in this
+environment).  The t CDF uses the regularized incomplete beta function
+(continued-fraction evaluation, Numerical Recipes §6.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# special functions
+# ---------------------------------------------------------------------------
+
+def _betacf(a: float, b: float, x: float, max_iter: int = 200,
+            eps: float = 3e-12) -> float:
+    """Continued fraction for the incomplete beta function."""
+    qab, qap, qam = a + b, a + 1.0, a - 1.0
+    c = 1.0
+    d = 1.0 - qab * x / qap
+    if abs(d) < 1e-300:
+        d = 1e-300
+    d = 1.0 / d
+    h = d
+    for m in range(1, max_iter + 1):
+        m2 = 2 * m
+        aa = m * (b - m) * x / ((qam + m2) * (a + m2))
+        d = 1.0 + aa * d
+        if abs(d) < 1e-300:
+            d = 1e-300
+        c = 1.0 + aa / c
+        if abs(c) < 1e-300:
+            c = 1e-300
+        d = 1.0 / d
+        h *= d * c
+        aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2))
+        d = 1.0 + aa * d
+        if abs(d) < 1e-300:
+            d = 1e-300
+        c = 1.0 + aa / c
+        if abs(c) < 1e-300:
+            c = 1e-300
+        d = 1.0 / d
+        delta = d * c
+        h *= delta
+        if abs(delta - 1.0) < eps:
+            break
+    return h
+
+
+def betainc(a: float, b: float, x: float) -> float:
+    """Regularized incomplete beta I_x(a, b)."""
+    if x <= 0.0:
+        return 0.0
+    if x >= 1.0:
+        return 1.0
+    ln_front = (math.lgamma(a + b) - math.lgamma(a) - math.lgamma(b)
+                + a * math.log(x) + b * math.log1p(-x))
+    front = math.exp(ln_front)
+    if x < (a + 1.0) / (a + b + 2.0):
+        return front * _betacf(a, b, x) / a
+    return 1.0 - front * _betacf(b, a, 1.0 - x) / b
+
+
+def t_cdf(t: float, dof: float) -> float:
+    """CDF of Student's t with ``dof`` degrees of freedom."""
+    if dof <= 0:
+        raise ValueError("dof must be positive")
+    x = dof / (dof + t * t)
+    p = 0.5 * betainc(dof / 2.0, 0.5, x)
+    return 1.0 - p if t > 0 else p
+
+
+def t_ppf(q: float, dof: float) -> float:
+    """Inverse t CDF by bisection (q in (0, 1))."""
+    if not 0.0 < q < 1.0:
+        raise ValueError("q must be in (0,1)")
+    lo, hi = -1e3, 1e3
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if t_cdf(mid, dof) < q:
+            lo = mid
+        else:
+            hi = mid
+        if hi - lo < 1e-10:
+            break
+    return 0.5 * (lo + hi)
+
+
+# ---------------------------------------------------------------------------
+# summary statistics (paper §3.4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Summary:
+    """mean ± std, 95% CI (t-distribution), CV — one benchmark config."""
+
+    n: int
+    mean: float
+    std: float
+    ci95: Tuple[float, float]
+    cv: float  # σ/µ, as a fraction
+
+    def __str__(self) -> str:
+        return (f"{self.mean:.4g} ± {self.std:.3g} "
+                f"[{self.ci95[0]:.4g}, {self.ci95[1]:.4g}] CV={100*self.cv:.1f}%")
+
+
+def summarize(samples: Sequence[float]) -> Summary:
+    x = np.asarray(list(samples), dtype=np.float64)
+    n = len(x)
+    mean = float(np.mean(x))
+    if n < 2:
+        return Summary(n, mean, 0.0, (mean, mean), 0.0)
+    std = float(np.std(x, ddof=1))
+    tcrit = t_ppf(0.975, n - 1)
+    half = tcrit * std / math.sqrt(n)
+    cv = std / mean if mean != 0 else float("inf")
+    return Summary(n, mean, std, (mean - half, mean + half), cv)
+
+
+def welch_t(a: Sequence[float], b: Sequence[float]) -> Tuple[float, float, float]:
+    """Welch's unequal-variance t-test.  Returns (t, dof, two-sided p)."""
+    xa = np.asarray(list(a), np.float64)
+    xb = np.asarray(list(b), np.float64)
+    na, nb = len(xa), len(xb)
+    va, vb = np.var(xa, ddof=1) / na, np.var(xb, ddof=1) / nb
+    denom = math.sqrt(va + vb)
+    if denom == 0:
+        return 0.0, float(na + nb - 2), 1.0
+    t = (float(np.mean(xa)) - float(np.mean(xb))) / denom
+    dof = (va + vb) ** 2 / (va ** 2 / (na - 1) + vb ** 2 / (nb - 1))
+    p = 2.0 * (1.0 - t_cdf(abs(t), dof))
+    return t, float(dof), p

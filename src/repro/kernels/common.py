@@ -1,0 +1,31 @@
+"""Shared kernel utilities: interpret-mode selection and padding helpers.
+
+TPU is the TARGET; this container is CPU-only, so kernels execute under
+``interpret=True`` (the kernel body runs as JAX ops on CPU) for
+correctness validation.  On a real TPU backend the same ``pallas_call``
+lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.lru_cache(None)
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_dim(x: jax.Array, axis: int, target: int) -> jax.Array:
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

@@ -1,0 +1,30 @@
+"""Public decode attention: GQA regrouping, cache padding, jit."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import round_up, use_interpret
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length, *, block_s: int = 128) -> jax.Array:
+    """q (B, 1, H, D); k/v (B, S, KV, D); length = valid entries → (B, 1, H, D)."""
+    b, one, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d) if one == 1 else None
+    assert qg is not None, "decode attention is single-token"
+    sp = round_up(s, block_s)
+    if sp != s:
+        pad = ((0, 0), (0, sp - s), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+    ln = jnp.asarray(length, jnp.int32).reshape(1, 1)
+    out = decode_attention_pallas(qg, k_cache, v_cache, ln,
+                                  block_s=block_s, interpret=use_interpret())
+    return out.reshape(b, 1, h, d)

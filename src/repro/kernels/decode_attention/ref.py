@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: masked decode attention (models/layers.py semantics)."""
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         length) -> jax.Array:
+    """q (B, 1, H, D); caches (B, S, KV, D); scalar length → (B, 1, H, D)."""
+    from repro.models import layers as L
+    return L.decode_attention(q, k_cache, v_cache, jnp.asarray(length))

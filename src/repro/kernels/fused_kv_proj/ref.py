@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: separate K and V projections, concatenated."""
+import jax
+import jax.numpy as jnp
+
+
+def kv_proj_ref(x: jax.Array, wk: jax.Array, wv: jax.Array,
+                bk: jax.Array, bv: jax.Array) -> jax.Array:
+    k = jnp.dot(x, wk, preferred_element_type=jnp.float32) + bk
+    v = jnp.dot(x, wv, preferred_element_type=jnp.float32) + bv
+    return jnp.concatenate([k, v], axis=-1).astype(x.dtype)

@@ -1,0 +1,60 @@
+"""Fused SwiGLU-MLP Pallas kernel: silu(x·Wg) ⊙ (x·Wu) in ONE pass.
+
+The paper's MLP fusion (gate+up+SiLU, 3 dispatches → 1, Table 5).  TPU
+formulation: the x block is loaded into VMEM once and fed to TWO MXU
+matmul streams (gate and up) accumulating into two float32 VMEM scratch
+buffers; the SiLU ⊙ epilogue runs on the VPU at the last K step.  Halves
+the activation-input HBM traffic relative to two separate matmuls — on
+top of removing two dispatches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fused_mlp_kernel(x_ref, wg_ref, wu_ref, o_ref, acc_g, acc_u, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    x = x_ref[...]
+    acc_g[...] += jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    acc_u[...] += jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = (jax.nn.silu(acc_g[...]) * acc_u[...]).astype(o_ref.dtype)
+
+
+def fused_mlp_pallas(x: jax.Array, wg: jax.Array, wu: jax.Array, *,
+                     block_m: int = 128, block_f: int = 128,
+                     block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """x (M, D), wg/wu (D, F) → silu(x·wg) ⊙ (x·wu)  (M, F)."""
+    m, d = x.shape
+    _, f = wg.shape
+    n_k = d // block_k
+    grid = (m // block_m, f // block_f, n_k)
+    return pl.pallas_call(
+        functools.partial(_fused_mlp_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_f), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k, block_f), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_f), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_f), jnp.float32),
+                        pltpu.VMEM((block_m, block_f), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, wg, wu)

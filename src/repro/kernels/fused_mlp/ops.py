@@ -1,0 +1,30 @@
+"""Public fused SwiGLU MLP entry point."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_dim, round_up, use_interpret
+from repro.kernels.fused_mlp.kernel import fused_mlp_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_f", "block_k"))
+def fused_mlp(x: jax.Array, wg: jax.Array, wu: jax.Array, *,
+              block_m: int = 128, block_f: int = 128,
+              block_k: int = 128) -> jax.Array:
+    shape = x.shape
+    d = shape[-1]
+    f = wg.shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    mp, kp, fp = round_up(rows, block_m), round_up(d, block_k), round_up(f, block_f)
+    xp = pad_dim(pad_dim(x2, 0, mp), 1, kp)
+    wgp = pad_dim(pad_dim(wg, 0, kp), 1, fp)
+    wup = pad_dim(pad_dim(wu, 0, kp), 1, fp)
+    out = fused_mlp_pallas(xp, wgp, wup, block_m=block_m, block_f=block_f,
+                           block_k=block_k, interpret=use_interpret())
+    return out[:rows, :f].reshape(*shape[:-1], f)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle: unfused gate/up/silu/mul chain."""
+import jax
+import jax.numpy as jnp
+
+
+def fused_mlp_ref(x: jax.Array, wg: jax.Array, wu: jax.Array) -> jax.Array:
+    g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    return (jax.nn.silu(g) * u).astype(x.dtype)

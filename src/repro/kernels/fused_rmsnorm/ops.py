@@ -1,0 +1,26 @@
+"""Public fused RMSNorm: flattens leading dims, pads rows, jits."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_dim, round_up, use_interpret
+from repro.kernels.fused_rmsnorm.kernel import rmsnorm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def fused_rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+                  block_rows: int = 8) -> jax.Array:
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    rp = round_up(max(rows, 1), block_rows)
+    xp = pad_dim(x2, 0, rp)
+    out = rmsnorm_pallas(xp, w, eps=eps, block_rows=block_rows,
+                         interpret=use_interpret())
+    return out[:rows].reshape(shape)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: the 6-op decomposition the kernel fuses."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    sq = jnp.square(xf)                                   # pow
+    mu = jnp.mean(sq, axis=-1, keepdims=True)             # mean
+    ve = mu + eps                                         # add ε
+    r = jax.lax.rsqrt(ve)                                 # rsqrt
+    y = xf * r                                            # mul x
+    return (y * w.astype(jnp.float32)).astype(x.dtype)    # mul w

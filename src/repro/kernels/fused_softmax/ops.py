@@ -1,0 +1,26 @@
+"""Public fused softmax entry point (padding uses -inf so the padded
+columns contribute zero probability mass)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import round_up, use_interpret
+from repro.kernels.fused_softmax.kernel import softmax_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fused_softmax(x: jax.Array, *, block_rows: int = 8) -> jax.Array:
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    rp = round_up(max(rows, 1), block_rows)
+    if rp != rows:
+        x2 = jnp.pad(x2, ((0, rp - rows), (0, 0)))
+    out = softmax_pallas(x2, block_rows=block_rows, interpret=use_interpret())
+    return out[:rows].reshape(shape)

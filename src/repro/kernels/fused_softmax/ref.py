@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for row softmax."""
+import jax
+import jax.numpy as jnp
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)

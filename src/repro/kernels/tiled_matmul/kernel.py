@@ -1,0 +1,58 @@
+"""Tiled matmul Pallas kernel — TPU adaptation of the paper's WGSL shader.
+
+The paper's shader used 16×16 workgroup tiles in shared memory (1–2% of
+FP32 peak, Table 8).  The TPU-native re-tiling: MXU-aligned 128×128 VMEM
+blocks, K-dimension streamed as the innermost ("arbitrary") grid axis with
+a float32 VMEM scratch accumulator — the revolving-buffer pipeline Mosaic
+generates overlaps the HBM→VMEM copies of block k+1 with the MXU work of
+block k, which is precisely the pipelining WGSL cannot express.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(x: jax.Array, y: jax.Array, *, block_m: int = 128,
+                  block_n: int = 128, block_k: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """x (M, K) @ y (K, N) → (M, N).  Dims must be multiples of the blocks
+    (ops.py pads)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    n_k = k // block_k
+    grid = (m // block_m, n // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, y)

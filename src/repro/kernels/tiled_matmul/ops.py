@@ -1,0 +1,23 @@
+"""Public entry point: pads to block multiples, jits, interprets on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_dim, round_up, use_interpret
+from repro.kernels.tiled_matmul.kernel import matmul_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def tiled_matmul(x: jax.Array, y: jax.Array, *, block_m: int = 128,
+                 block_n: int = 128, block_k: int = 128) -> jax.Array:
+    m, k = x.shape
+    _, n = y.shape
+    mp, kp, np_ = round_up(m, block_m), round_up(k, block_k), round_up(n, block_n)
+    xp = pad_dim(pad_dim(x, 0, mp), 1, kp)
+    yp = pad_dim(pad_dim(y, 0, kp), 1, np_)
+    out = matmul_pallas(xp, yp, block_m=block_m, block_n=block_n,
+                        block_k=block_k, interpret=use_interpret())
+    return out[:m, :n]

@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede every other import (jax locks the device
+# count at first init).  512 placeholder host devices let jax.make_mesh
+# build the production (16,16) single-pod and (2,16,16) multi-pod meshes.
+# Tests may shrink the placeholder fleet via REPRO_DRYRUN_DEVICES.
+_override = os.environ.get("REPRO_DRYRUN_DEVICES")
+if _override:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_override}")
+
+"""Multi-pod dry-run: ``lower().compile()`` every (architecture × input
+shape × mesh) cell and extract memory / cost / collective analysis.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, compile-time OOM, or unsupported collective
+fails the cell.  Results stream to one JSON per cell (crash-safe, resumable).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                     # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shapes train_4k --mesh single,multi --out results/dryrun
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _mesh(mesh_name: str):
+    """single → (16,16); multi → (2,16,16); testN → a tiny (2, N/2) mesh."""
+    from repro.launch.mesh import make_mesh, make_production_mesh
+    if mesh_name == "single":
+        return make_production_mesh(multi_pod=False)
+    if mesh_name == "multi":
+        return make_production_mesh(multi_pod=True)
+    if mesh_name.startswith("test"):
+        n = int(mesh_name[4:] or len(jax.devices()))
+        return make_mesh((2, n // 2), ("data", "model"))
+    raise ValueError(mesh_name)
+
+
+def _scaled_shape(shape, scale: int):
+    """Shrink global batch for tiny test meshes (keeps seq length)."""
+    if scale <= 1:
+        return shape
+    import dataclasses
+    return dataclasses.replace(
+        shape, global_batch=max(2, shape.global_batch // scale))
+
+
+def lower_cell(arch: str, shape_name: str, mesh_name: str, *,
+               grad_accum: int = 1, remat: bool = True, fsdp: bool = False,
+               sp: bool = False, collect_text: bool = False) -> Dict[str, Any]:
+    """Lower + compile one cell; return the §Dry-run / §Roofline record."""
+    import contextlib
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.analysis.flops import model_flops
+    from repro.analysis.roofline import analyze_compiled
+    from repro.configs import REGISTRY, SHAPES
+    from repro.launch import steps
+    from repro.models import build_model
+    from repro.sharding import rules
+    from repro.sharding.activation import (activation_policy, moe_block_spec,
+                                           sequence_parallel_spec)
+
+    cfg = REGISTRY[arch]
+    shape = SHAPES[shape_name]
+    mesh = _mesh(mesh_name)
+    chips = math.prod(mesh.devices.shape)
+    if mesh_name.startswith("test"):
+        shape = _scaled_shape(shape, 256 // max(chips, 1))
+    model = build_model(cfg)
+    specs = model.input_specs(shape)
+
+    sp_ctx = (activation_policy(sequence_parallel_spec(mesh),
+                                moe_block_spec(mesh)) if sp
+              else contextlib.nullcontext())
+    t0 = time.perf_counter()
+    with mesh, sp_ctx:
+        if shape.kind == "train":
+            state_shapes = steps.train_state_specs(model)
+            state_sh = rules.state_shardings(state_shapes, mesh, fsdp=fsdp)
+            batch_sh = rules.batch_shardings(specs, mesh)
+            fn = steps.train_step_fn(model, grad_accum=grad_accum,
+                                     remat=remat)
+            lowered = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None)
+                              ).lower(state_shapes, specs)
+        elif shape.kind == "prefill":
+            params_shapes = model.param_specs()
+            p_sh = rules.param_shardings(params_shapes, mesh, fsdp=fsdp)
+            batch_sh = rules.batch_shardings(specs, mesh)
+            fn = steps.prefill_step_fn(model, shape)
+            lowered = jax.jit(fn, in_shardings=(p_sh, batch_sh)
+                              ).lower(params_shapes, specs)
+        else:  # decode
+            params_shapes = model.param_specs()
+            p_sh = rules.param_shardings(params_shapes, mesh, fsdp=fsdp)
+            cache_spec = specs.pop("cache")
+            cache_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                rules.cache_pspecs(cache_spec, mesh, shape.global_batch))
+            # batch may be smaller than the data axes (long_500k is B=1):
+            # replicate tokens rather than force an indivisible sharding
+            tok_sh = rules.batch_shardings(
+                {"tokens": specs["tokens"]}, mesh)["tokens"]
+            fn = steps.decode_step_fn(model)
+            lowered = jax.jit(fn,
+                              in_shardings=(p_sh, cache_sh, tok_sh),
+                              out_shardings=(cache_sh, None)
+                              ).lower(params_shapes, cache_spec,
+                                      specs["tokens"])
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    report = analyze_compiled(compiled, arch=arch, shape=shape.name,
+                              mesh_name=mesh_name, chips=chips,
+                              model_flops=model_flops(cfg, shape))
+    mem = report.memory
+    print(f"[dryrun] {arch} × {shape.name} × {mesh_name}: OK "
+          f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s) "
+          f"args/device={mem.get('argument_size_in_bytes', 0)/2**30:.2f} GiB "
+          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f} GiB "
+          f"dominant={report.dominant}")
+    rec = {
+        "status": "ok",
+        "lower_s": t_lower, "compile_s": t_compile,
+        "grad_accum": grad_accum, "remat": remat, "fsdp": fsdp,
+        "sp": sp,
+        **report.row(),
+    }
+    if collect_text:
+        rec["hlo_text"] = compiled.as_text()
+    return rec
+
+
+def run_cells(archs, shape_names, mesh_names, out_dir: str, *,
+              grad_accum: int = 1, remat: bool = True, fsdp: bool = False,
+              sp: bool = False, resume: bool = True) -> Dict[str, Any]:
+    os.makedirs(out_dir, exist_ok=True)
+    results = {}
+    for arch in archs:
+        from repro.configs import REGISTRY, shapes_for
+        cfg = REGISTRY[arch]
+        applicable = {s.name for s in shapes_for(cfg.family)}
+        for shape_name in shape_names:
+            if shape_name not in applicable:
+                key = f"{arch}__{shape_name}"
+                results[key] = {"status": "skipped",
+                                "reason": "long_500k needs sub-quadratic "
+                                          "attention (DESIGN.md §4)"}
+                continue
+            for mesh_name in mesh_names:
+                key = f"{arch}__{shape_name}__{mesh_name}"
+                path = os.path.join(out_dir, key + ".json")
+                if resume and os.path.exists(path):
+                    with open(path) as f:
+                        results[key] = json.load(f)
+                    print(f"[dryrun] {key}: cached")
+                    continue
+                try:
+                    rec = lower_cell(arch, shape_name, mesh_name,
+                                     grad_accum=grad_accum, remat=remat,
+                                     fsdp=fsdp, sp=sp, collect_text=True)
+                except Exception as e:  # a failed cell is a bug — record it
+                    traceback.print_exc()
+                    rec = {"status": "failed", "error": f"{type(e).__name__}: {e}"}
+                hlo = rec.pop("hlo_text", None)
+                if hlo is not None:
+                    # persist the optimized HLO so re-analysis never recompiles
+                    with open(os.path.join(out_dir, key + ".hlo.txt"), "w") as f:
+                        f.write(hlo)
+                results[key] = rec
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+    return results
+
+
+def main() -> None:
+    from repro.configs import ASSIGNED, SHAPES
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="comma list or 'all' (the 10 assigned archs)")
+    ap.add_argument("--shapes", default="all")
+    ap.add_argument("--mesh", default="single,multi",
+                    help="single | multi | testN (comma list)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--fsdp", action="store_true",
+                    help="ZeRO-3 param/optimizer sharding over the data axis")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel activation constraints")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED) if args.arch == "all" else args.arch.split(",")
+    shape_names = list(SHAPES) if args.shapes == "all" else args.shapes.split(",")
+    mesh_names = args.mesh.split(",")
+    results = run_cells(archs, shape_names, mesh_names, args.out,
+                        grad_accum=args.grad_accum, remat=not args.no_remat,
+                        fsdp=args.fsdp, sp=args.sp,
+                        resume=not args.no_resume)
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skipped")
+    n_fail = sum(1 for r in results.values() if r.get("status") == "failed")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Serving launcher — the paper's benchmark protocol as a CLI.
+
+    PYTHONPATH=src python -m repro.launch.serve --model bench-0.5b \
+        --modes F0,F3,FULL,model,ondevice --tokens 50 --runs 10
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="bench-0.5b",
+                    help="bench-0.5b | bench-1.5b | any registry arch "
+                         "(smoke-reduced)")
+    ap.add_argument("--modes", default="F0,F3,FULL,model")
+    ap.add_argument("--tokens", type=int, default=50)
+    ap.add_argument("--prompt-len", type=int, default=5)
+    ap.add_argument("--runs", type=int, default=10)
+    ap.add_argument("--warmup", type=int, default=3)
+    ap.add_argument("--readback", default="token", choices=["token", "logits"])
+    ap.add_argument("--out", default=None, help="write JSON rows here")
+    args = ap.parse_args()
+
+    from repro.configs import REGISTRY, get_smoke_config
+    from repro.configs.bench import BENCH_MODELS
+    from repro.models import build_model
+    from repro.serving.engine import GenerationEngine
+
+    if args.model in BENCH_MODELS:
+        cfg = BENCH_MODELS[args.model]
+    elif args.model in REGISTRY:
+        cfg = get_smoke_config(args.model)
+    else:
+        raise SystemExit(f"unknown model {args.model}")
+
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size,
+                          size=(1, args.prompt_len)).astype(np.int32)
+    max_len = args.prompt_len + args.tokens + 8
+
+    rows = []
+    for mode in args.modes.split(","):
+        eng = GenerationEngine(model, params, mode=mode, batch=1,
+                               max_len=max_len, readback=args.readback)
+        rep = eng.benchmark(prompt, args.tokens, n_runs=args.runs,
+                            warmup=args.warmup)
+        row = rep.row()
+        print(f"[serve] {row}")
+        rows.append(row)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

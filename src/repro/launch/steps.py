@@ -1,0 +1,49 @@
+"""Step-function factories shared by the dry-run, the trainer launcher and
+the serving launcher.  Every step is a pure function of explicit state —
+lowerable against ShapeDtypeStructs with sharded in/out specs."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models.factory import Model
+from repro.train.optimizer import AdamWConfig, adamw
+from repro.train.trainer import make_train_step
+
+
+def train_step_fn(model: Model, *, grad_accum: int = 1, remat: bool = True,
+                  opt_cfg: AdamWConfig = AdamWConfig()) -> Callable:
+    opt = adamw(opt_cfg)
+    return make_train_step(model, opt, grad_accum=grad_accum, remat=remat)
+
+
+def train_state_specs(model: Model, opt_cfg: AdamWConfig = AdamWConfig()):
+    """Abstract train-state shapes (no allocation)."""
+    opt = adamw(opt_cfg)
+
+    def init():
+        params = model.init_params(jax.random.PRNGKey(0))
+        return {"params": params, "opt": opt.init(params),
+                "step": jax.numpy.zeros((), jax.numpy.int32)}
+
+    return jax.eval_shape(init)
+
+
+def prefill_step_fn(model: Model, shape: ShapeSpec) -> Callable:
+    max_len = shape.seq_len
+
+    def step(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return step
+
+
+def decode_step_fn(model: Model) -> Callable:
+    def step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return step

@@ -1,0 +1,6 @@
+"""Model zoo: one module per architecture family, a shared layers library,
+and a factory that maps a ``ModelConfig`` to a ``Model`` bundle
+(init / forward / prefill / decode_step / input_specs)."""
+from repro.models.factory import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,192 @@
+"""Model factory: maps a ``ModelConfig`` to a uniform ``Model`` bundle.
+
+Every architecture family exposes the same five entry points
+(init_params / forward / prefill / decode_step / cache handling) plus
+``input_specs`` returning ShapeDtypeStruct stand-ins for each assigned
+input shape — the contract the launcher, trainer, serving engine, dry-run
+and tests all program against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import layers as L
+from repro.models import mamba2, rglru, transformer, vlm, whisper
+
+Params = Dict[str, Any]
+Batch = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Uniform functional interface over all architecture families."""
+
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], Params]
+    forward: Callable[..., Tuple[jax.Array, jax.Array]]  # (params, batch) -> (logits, aux)
+    prefill: Callable[..., Tuple[Params, jax.Array]]     # (params, batch, max_len)
+    decode_step: Callable[..., Tuple[Params, jax.Array]]  # (params, cache, tokens)
+    init_cache: Callable[[int, int], Params]             # (batch, max_len)
+    cache_spec: Callable[[int, int], Params]
+
+    # ------------------------------------------------------------------
+    def loss(self, params: Params, batch: Batch, **fw_kw
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = self.forward(params, batch, **fw_kw)
+        ce = L.cross_entropy_loss(logits, batch["labels"],
+                                  batch.get("loss_mask"))
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def param_specs(self, rng=None) -> Params:
+        """Abstract parameter shapes (no allocation) for the dry-run."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        return jax.eval_shape(self.init_params, rng)
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for one assigned input-shape cell.
+
+        * train / prefill: full-sequence inputs
+        * decode: one new token + a cache of ``seq_len`` entries
+        Modality frontends are stubs: VLM gets patch embeddings, Whisper gets
+        frame embeddings (precomputed, per the assignment).
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, i32)
+        specs: Dict[str, Any] = {}
+        if shape.kind == "train":
+            specs["tokens"] = tok(b, s)
+            specs["labels"] = tok(b, s)
+        elif shape.kind == "prefill":
+            specs["tokens"] = tok(b, s)
+        else:  # decode: one token against a cache of length s
+            specs["tokens"] = tok(b, 1)
+            specs["cache"] = self.cache_spec(b, s)
+        if cfg.family == "vlm" and shape.kind != "decode":
+            e = cfg.encoder
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, e.num_positions, e.d_model), jnp.dtype(cfg.dtype))
+        if cfg.family == "encdec" and shape.kind != "decode":
+            e = cfg.encoder
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, e.num_positions, e.d_model), jnp.dtype(cfg.dtype))
+        return specs
+
+    def make_inputs(self, shape: ShapeSpec, rng=None) -> Batch:
+        """Concrete (small-shape) inputs matching ``input_specs`` structure."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        out: Batch = {}
+        for name, spec in self.input_specs(shape).items():
+            if name == "cache":
+                out[name] = self.init_cache(shape.global_batch, shape.seq_len)
+            elif spec.dtype == jnp.int32:
+                rng, k = jax.random.split(rng)
+                out[name] = jax.random.randint(k, spec.shape, 0,
+                                               self.cfg.vocab_size, jnp.int32)
+            else:
+                rng, k = jax.random.split(rng)
+                out[name] = jax.random.normal(k, spec.shape, jnp.float32).astype(spec.dtype)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# per-family adapters
+# ---------------------------------------------------------------------------
+
+def _dense(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init_params=lambda rng: transformer.init_params(rng, cfg),
+        forward=lambda p, batch, **kw: transformer.forward(
+            p, cfg, batch["tokens"], **kw),
+        prefill=lambda p, batch, max_len: transformer.prefill(
+            p, cfg, batch["tokens"], max_len),
+        decode_step=lambda p, cache, tokens: transformer.decode_step(
+            p, cfg, cache, tokens),
+        init_cache=lambda b, m: transformer.init_cache(cfg, b, m),
+        cache_spec=lambda b, m: transformer.cache_spec(cfg, b, m),
+    )
+
+
+def _vlm(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init_params=lambda rng: vlm.init_params(rng, cfg),
+        forward=lambda p, batch, **kw: vlm.forward(
+            p, cfg, batch["tokens"], batch["patch_embeds"], **kw),
+        prefill=lambda p, batch, max_len: vlm.prefill(
+            p, cfg, batch["tokens"], batch["patch_embeds"], max_len),
+        decode_step=lambda p, cache, tokens: vlm.decode_step(
+            p, cfg, cache, tokens),
+        init_cache=lambda b, m: vlm.init_cache(cfg, b, m),
+        cache_spec=lambda b, m: vlm.cache_spec(cfg, b, m),
+    )
+
+
+def _encdec(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init_params=lambda rng: whisper.init_params(rng, cfg),
+        forward=lambda p, batch, **kw: whisper.forward(
+            p, cfg, batch["tokens"], batch["frames"], **kw),
+        prefill=lambda p, batch, max_len: whisper.prefill(
+            p, cfg, batch["tokens"], batch["frames"], max_len),
+        decode_step=lambda p, cache, tokens: whisper.decode_step(
+            p, cfg, cache, tokens),
+        init_cache=lambda b, m: whisper.init_cache(cfg, b, m),
+        cache_spec=lambda b, m: whisper.cache_spec(cfg, b, m),
+    )
+
+
+def _ssm(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init_params=lambda rng: mamba2.init_params(rng, cfg),
+        forward=lambda p, batch, **kw: mamba2.forward(
+            p, cfg, batch["tokens"], **kw),
+        prefill=lambda p, batch, max_len: mamba2.prefill(
+            p, cfg, batch["tokens"], max_len),
+        decode_step=lambda p, cache, tokens: mamba2.decode_step(
+            p, cfg, cache, tokens),
+        init_cache=lambda b, m: mamba2.init_cache(cfg, b, m),
+        cache_spec=lambda b, m: mamba2.cache_spec(cfg, b, m),
+    )
+
+
+def _hybrid(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init_params=lambda rng: rglru.init_params(rng, cfg),
+        forward=lambda p, batch, **kw: rglru.forward(
+            p, cfg, batch["tokens"], **kw),
+        prefill=lambda p, batch, max_len: rglru.prefill(
+            p, cfg, batch["tokens"], max_len),
+        decode_step=lambda p, cache, tokens: rglru.decode_step(
+            p, cfg, cache, tokens),
+        init_cache=lambda b, m: rglru.init_cache(cfg, b, m),
+        cache_spec=lambda b, m: rglru.cache_spec(cfg, b, m),
+    )
+
+
+_FAMILIES = {
+    "dense": _dense,
+    "moe": _dense,   # MoE reuses the transformer backbone (FFN switched inside)
+    "vlm": _vlm,
+    "encdec": _encdec,
+    "ssm": _ssm,
+    "hybrid": _hybrid,
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILIES:
+        raise ValueError(f"unknown family {cfg.family!r} for {cfg.name}")
+    return _FAMILIES[cfg.family](cfg)

@@ -1,0 +1,295 @@
+"""Mamba-2 (state-space duality, arXiv:2405.21060) — attention-free LM.
+
+Prefill/train use the chunked SSD algorithm (scan over chunks of
+``chunk_size`` with an inter-chunk recurrent state carry); decode is the
+O(1) recurrence.  This is the assigned ``mamba2-1.3b`` [ssm] architecture
+and the designated ``long_500k`` runner: decode state is independent of
+sequence length.
+
+Per-layer state: conv buffer (d_conv-1 last inputs of the xBC stream) and
+the SSM state h (heads, head_dim, d_state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+# NOTE: no SP constrain_hidden here — sequence-sharding hidden states
+# regresses SSD 0.4× (the time-chunk scan is sequential; seq sharding
+# forces per-chunk gathers + conv halo exchanges).  §Perf iteration 9,
+# refuted hypothesis: SP is an attention-family optimization.
+
+Params = Dict[str, Any]
+N_GROUPS = 1  # B/C shared across heads (Mamba-2 default single group)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_ch = d_inner + 2 * N_GROUPS * s.d_state
+    in_dim = 2 * d_inner + 2 * N_GROUPS * s.d_state + nh  # z, xBC, dt
+    return d_inner, nh, conv_ch, in_dim
+
+
+def init_layer(rng, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    s = cfg.ssm
+    d_inner, nh, conv_ch, in_dim = _dims(cfg)
+    ks = jax.random.split(rng, 5)
+    return {
+        "norm": jnp.ones((cfg.d_model,), dt),
+        "in_proj": L.dense_init(ks[0], cfg.d_model, in_dim, dt),
+        "conv_w": (jax.random.normal(ks[1], (conv_ch, s.d_conv)) / math.sqrt(s.d_conv)).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "dt_bias": jnp.log(jnp.exp(jnp.linspace(1e-3, 0.1, nh)) - 1.0).astype(jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gated_norm": jnp.ones((d_inner,), dt),
+        "out_proj": L.dense_init(ks[4], d_inner, cfg.d_model, dt),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    k_emb, k_blocks = jax.random.split(rng)
+    blocks = jax.vmap(lambda k: init_layer(k, cfg))(
+        jax.random.split(k_blocks, cfg.num_layers))
+    return {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    d_inner, nh, _, _ = _dims(cfg)
+    ds = N_GROUPS * s.d_state
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * ds], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    s = cfg.ssm
+    d_inner, _, _, _ = _dims(cfg)
+    ds = N_GROUPS * s.d_state
+    x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+    return x, bmat, cmat
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD scan (prefill / train)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: jax.Array, a: jax.Array, bmat: jax.Array, cmat: jax.Array,
+                dt: jax.Array, d_skip: jax.Array, chunk: int,
+                h0: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked state-space-duality scan.
+
+    x   (B, S, H, P)   per-head inputs
+    a   (B, S, H)      log-decay per step  (= -dt * A, <= 0)
+    b/c (B, S, N)      shared input/output projections (n_groups=1)
+    dt  (B, S, H)      step sizes
+    returns (y (B, S, H, P), final state (B, H, P, N))
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    ac = a.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h)
+
+    def chunk_step(hstate, inp):
+        xi, ai, bi, ci, dti = inp          # (B,Q,H,P) (B,Q,H) (B,Q,N) ...
+        cum = jnp.cumsum(ai, axis=1)       # (B,Q,H) inclusive
+        total = cum[:, -1]                 # (B,H)
+        # intra-chunk (masked attention-like) term
+        scores = jnp.einsum("bqn,bkn->bqk", ci, bi)                # (B,Q,Q)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,Q,K,H)
+        q_idx = jnp.arange(xi.shape[1])
+        mask = q_idx[:, None] >= q_idx[None, :]
+        m = scores[:, :, :, None] * decay * dti[:, None, :, :]
+        m = jnp.where(mask[None, :, :, None], m, 0.0)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", m, xi)
+        # contribution of the carried-in state
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", ci, hstate, jnp.exp(cum))
+        # new chunk state
+        sdecay = jnp.exp(total[:, None, :] - cum)                  # (B,Q,H)
+        st = jnp.einsum("bkn,bkhp,bkh->bhpn", bi, xi, sdecay * dti)
+        hnew = hstate * jnp.exp(total)[:, :, None, None] + st
+        return hnew, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hfin, ys = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(ac, 1, 0), jnp.moveaxis(bc, 1, 0),
+         jnp.moveaxis(cc, 1, 0), jnp.moveaxis(dtc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, h, p)[:, :s]
+    y = y + x[:, :s].astype(jnp.float32) * d_skip[None, None, :, None]
+    return y, hfin
+
+
+# ---------------------------------------------------------------------------
+# layer forward
+# ---------------------------------------------------------------------------
+
+def layer_forward(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence Mamba-2 layer (train / prefill math)."""
+    s_cfg = cfg.ssm
+    d_inner, nh, conv_ch, _ = _dims(cfg)
+    b, s, _ = x.shape
+    zxbcdt = L.linear(x, p["in_proj"])
+    z, xbc, dt_raw = _split_in_proj(cfg, zxbcdt)
+    xbc = jax.nn.silu(L.causal_conv1d(xbc, p["conv_w"]).astype(jnp.float32)
+                      + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xin, bmat, cmat = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["A_log"]) * dt                                     # (B,S,H)
+    xh = xin.reshape(b, s, nh, s_cfg.head_dim)
+    y, _ = ssd_chunked(xh, a, bmat, cmat, dt, p["D"], s_cfg.chunk_size)
+    y = y.reshape(b, s, d_inner)
+    y = L.rmsnorm(y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                  p["gated_norm"], cfg.rms_eps)
+    return L.linear(y, p["out_proj"])
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            scan_layers: bool = True, remat: bool = False
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = params["embed"][tokens]
+
+    def body(p, xc):
+        return xc + layer_forward(p, cfg, L.rmsnorm(xc, p["norm"], cfg.rms_eps))
+
+    if scan_layers:
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+        x, _ = jax.lax.scan(lambda c, p: (fn(p, c), None), x, params["blocks"])
+    else:
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["blocks"])
+            x = body(lp, x)
+    x = L.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("...d,dv->...v", x, params["embed"].T,
+                        preferred_element_type=jnp.float32)
+    return logits, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# serving path (state cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """State is O(1) in max_len — that is the point of the SSM family."""
+    del max_len
+    s = cfg.ssm
+    d_inner, nh, conv_ch, _ = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "conv": jnp.zeros((cfg.num_layers, batch, s.d_conv - 1, conv_ch), dt),
+        "ssm": jnp.zeros((cfg.num_layers, batch, nh, s.head_dim, s.d_state), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        init_cache(cfg, batch, max_len),
+                        is_leaf=lambda a: isinstance(a, jnp.ndarray))
+
+
+def _layer_prefill(p, cfg, x):
+    """Like layer_forward but also returns (conv_state, ssm_state)."""
+    s_cfg = cfg.ssm
+    d_inner, nh, conv_ch, _ = _dims(cfg)
+    b, s, _ = x.shape
+    zxbcdt = L.linear(x, p["in_proj"])
+    z, xbc_raw, dt_raw = _split_in_proj(cfg, zxbcdt)
+    conv_state = xbc_raw[:, -(s_cfg.d_conv - 1):, :]
+    xbc = jax.nn.silu(L.causal_conv1d(xbc_raw, p["conv_w"]).astype(jnp.float32)
+                      + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xin, bmat, cmat = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"]) * dt
+    xh = xin.reshape(b, s, nh, s_cfg.head_dim)
+    y, hfin = ssd_chunked(xh, a, bmat, cmat, dt, p["D"], s_cfg.chunk_size)
+    y = y.reshape(b, s, d_inner)
+    y = L.rmsnorm(y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                  p["gated_norm"], cfg.rms_eps)
+    return L.linear(y, p["out_proj"]), conv_state, hfin
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int) -> Tuple[Params, jax.Array]:
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+
+    def scan_body(carry, p):
+        xc = carry
+        y, conv_st, ssm_st = _layer_prefill(p, cfg, L.rmsnorm(xc, p["norm"], cfg.rms_eps))
+        return xc + y, (conv_st, ssm_st)
+
+    x, (conv, ssm) = jax.lax.scan(scan_body, x, params["blocks"])
+    x = L.rmsnorm(x[:, -1:, :], params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("...d,dv->...v", x, params["embed"].T,
+                        preferred_element_type=jnp.float32)
+    cache = {"conv": conv, "ssm": ssm, "pos": jnp.int32(s)}
+    return cache, logits
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array) -> Tuple[Params, jax.Array]:
+    """O(1) single-token recurrence."""
+    s_cfg = cfg.ssm
+    d_inner, nh, conv_ch, _ = _dims(cfg)
+    x = params["embed"][tokens]          # (B, 1, d)
+    b = x.shape[0]
+
+    def scan_body(carry, scan_in):
+        xc = carry
+        p, conv_st, hstate = scan_in     # conv (B,K-1,C) ; h (B,H,P,N)
+        xn = L.rmsnorm(xc, p["norm"], cfg.rms_eps)
+        zxbcdt = L.linear(xn, p["in_proj"])[:, 0]            # (B, in_dim)
+        z, xbc_new, dt_raw = _split_in_proj(cfg, zxbcdt)
+        # conv over the rolled buffer
+        win = jnp.concatenate([conv_st, xbc_new[:, None, :]], axis=1)  # (B,K,C)
+        conv_out = jnp.einsum("bkc,ck->bc", win.astype(jnp.float32),
+                              p["conv_w"].astype(jnp.float32))
+        xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(xc.dtype)
+        xin, bmat, cmat = _split_xbc(cfg, xbc)               # (B,di) (B,N) (B,N)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+        decay = jnp.exp(-jnp.exp(p["A_log"]) * dt)           # (B,H)
+        xh = xin.reshape(b, nh, s_cfg.head_dim).astype(jnp.float32)
+        upd = jnp.einsum("bhp,bn,bh->bhpn", xh, bmat.astype(jnp.float32), dt)
+        hnew = hstate * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", hnew, cmat.astype(jnp.float32))
+        y = y + xh * p["D"][None, :, None]
+        y = y.reshape(b, 1, d_inner)
+        y = L.rmsnorm(y.astype(xc.dtype) * jax.nn.silu(
+            z.astype(jnp.float32)).astype(xc.dtype)[:, None, :],
+            p["gated_norm"], cfg.rms_eps)
+        out = xc + L.linear(y, p["out_proj"])
+        return out, (win[:, 1:], hnew)
+
+    x, (conv, ssm) = jax.lax.scan(scan_body, x,
+                                  (params["blocks"], cache["conv"], cache["ssm"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("...d,dv->...v", x, params["embed"].T,
+                        preferred_element_type=jnp.float32)
+    return {"conv": conv, "ssm": ssm, "pos": cache["pos"] + 1}, logits

@@ -1,0 +1,133 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch.
+
+TPU-friendly formulation: no ragged shapes, no (T, E, C) one-hot tensor.
+Tokens are grouped by expert with a stable argsort, truncated to a static
+per-expert capacity, gathered into a dense ``(E, C, d)`` block, pushed
+through a batched-einsum SwiGLU, and scatter-added back with their router
+weights.  Experts shard over the "model" mesh axis (expert parallelism);
+the dispatch gather/scatter lower to collectives GSPMD schedules.
+
+Covers qwen3-moe-235b-a22b (128e top-8) and granite-moe-1b-a400m (32e top-8).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.activation import constrain_moe_block
+
+Params = Dict[str, Any]
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe_ffn(rng, cfg: ModelConfig) -> Params:
+    assert cfg.moe is not None
+    dt = jnp.dtype(cfg.dtype)
+    e = cfg.moe
+    d, f = cfg.d_model, e.expert_d_ff
+    ks = jax.random.split(rng, 4)
+    scale = 1.0 / math.sqrt(d)
+    return {
+        "router": (jax.random.normal(ks[0], (d, e.num_experts)) * scale).astype(dt),
+        "w_gate": (jax.random.normal(ks[1], (e.num_experts, d, f)) * scale).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (e.num_experts, d, f)) * scale).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e.num_experts, f, d)) * (1.0 / math.sqrt(f))).astype(dt),
+    }
+
+
+def capacity(num_tokens: int, num_experts: int, top_k: int,
+             factor: float = CAPACITY_FACTOR) -> int:
+    c = math.ceil(num_tokens * top_k / num_experts * factor)
+    return max(8, ((c + 7) // 8) * 8)  # lane-aligned, never zero
+
+
+# token-group size for chunked dispatch: routing/sort stay chunk-local so
+# the chunk axis shards over "data" and cross-chip token movement lowers to
+# the canonical MoE all-to-all instead of a global sort (§Perf iteration 5)
+CHUNK_TOKENS = 16384
+
+
+def _n_chunks(t: int) -> int:
+    n = max(1, t // CHUNK_TOKENS)
+    # power of two → divides typical data-axis sizes (8, 16, 32)
+    while n & (n - 1):
+        n &= n - 1
+    return n
+
+
+def moe_ffn(p: Params, cfg: ModelConfig, x: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) → (y (B, S, d), load-balance aux loss).
+
+    Chunked sort-based dispatch: tokens are split into chunks (a real,
+    shardable tensor dim); each chunk routes/sorts locally to a per-chunk
+    capacity, experts run one grouped einsum over (chunk, expert) blocks.
+    """
+    e = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = e.top_k
+    n_e = e.num_experts
+    nc = _n_chunks(t)
+    tc = t // nc                                              # tokens/chunk
+    cap = capacity(tc, n_e, k)
+    xf = x.reshape(nc, tc, d)
+
+    # --- routing (float32 for numerics) ---------------------------------
+    logits = jnp.einsum("ntd,de->nte", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (nc, tc, E)
+    top_p, top_i = jax.lax.top_k(probs, k)                    # (nc, tc, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)    # renormalize
+
+    # --- chunk-local sort-based slot assignment --------------------------
+    flat_e = top_i.reshape(nc, tc * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    group_start = jax.vmap(
+        lambda se: jnp.searchsorted(se, se, side="left"))(sorted_e)
+    pos_in_e = jnp.arange(tc * k)[None, :] - group_start
+    keep = pos_in_e < cap
+    safe_pos = jnp.where(keep, pos_in_e, cap)                 # cap = OOB → drop
+
+    slot_token = order // k                                   # (nc, tc*k)
+    slot_gate = jnp.take_along_axis(top_p.reshape(nc, tc * k), order, axis=-1)
+
+    zt = jnp.zeros((nc, n_e, cap), jnp.int32)
+    zg = jnp.zeros((nc, n_e, cap), jnp.float32)
+    cidx = jnp.broadcast_to(jnp.arange(nc)[:, None], sorted_e.shape)
+    dispatch_tok = zt.at[cidx, sorted_e, safe_pos].set(slot_token, mode="drop")
+    dispatch_gate = zg.at[cidx, sorted_e, safe_pos].set(slot_gate, mode="drop")
+
+    # --- expert compute (grouped over chunk × expert) ---------------------
+    # (nc, E, C, d): the (chunk ↔ expert) exchange is the MoE all-to-all
+    xe = jax.vmap(lambda xc, tok: xc[tok])(xf, dispatch_tok)
+    xe = constrain_moe_block(xe)
+    g = jnp.einsum("necd,edf->necf", xe, p["w_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("necd,edf->necf", xe, p["w_up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    ye = jnp.einsum("necf,efd->necd", h, p["w_down"],
+                    preferred_element_type=jnp.float32)       # (nc, E, C, d)
+    ye = constrain_moe_block(ye)
+
+    # --- combine ----------------------------------------------------------
+    contrib = (ye * dispatch_gate[..., None]).astype(x.dtype)
+    y = jax.vmap(lambda tok, c: jnp.zeros((tc, d), x.dtype).at[tok].add(c))(
+        dispatch_tok, contrib)
+    y = y.reshape(b, s, d)
+
+    # --- Switch-style load-balance aux loss -------------------------------
+    # fraction of routed slots per expert × mean router prob per expert
+    frac = jnp.mean(jax.nn.one_hot(top_i, n_e, dtype=jnp.float32),
+                    axis=(0, 1, 2))
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = n_e * jnp.sum(frac * mean_p) * e.router_aux_weight
+    return y, aux

@@ -1,0 +1,473 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): RG-LRU recurrent
+blocks interleaved with local (sliding-window) MQA attention in a
+(recurrent, recurrent, attention) pattern.
+
+Depth handling: layers are grouped into super-blocks of 3 (one full pattern
+round) that scan with stacked parameters; the remainder (38 mod 3 = 2
+recurrent layers) is unrolled.  Decode state is O(1): per recurrent layer a
+(B, lru_width) hidden + conv buffer; per attention layer a ring-buffer KV of
+``attention_window`` slots — which is why this arch runs the ``long_500k``
+cell (sequence length only moves the position counter).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.activation import constrain_hidden
+
+Params = Dict[str, Any]
+RGLRU_C = 8.0  # the Griffin recurrence-gate exponent constant
+
+
+def _pattern_layout(cfg: ModelConfig) -> Tuple[int, List[str]]:
+    """(number of full super-blocks, remainder layer kinds)."""
+    pat = cfg.rglru.pattern
+    n_super = cfg.num_layers // len(pat)
+    rest = [pat[i % len(pat)] for i in range(n_super * len(pat), cfg.num_layers)]
+    return n_super, rest
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_recurrent(rng, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d, w = cfg.d_model, _lru_width(cfg)
+    k = jax.random.split(rng, 6)
+    s = 1.0 / math.sqrt(w)
+    return {
+        "w_x": L.dense_init(k[0], d, w, dt),          # x branch
+        "w_y": L.dense_init(k[1], d, w, dt),          # gate branch (GeLU)
+        "conv_w": (jax.random.normal(k[2], (w, cfg.rglru.conv1d_width))
+                   / math.sqrt(cfg.rglru.conv1d_width)).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_i": (jax.random.normal(k[3], (w, w)) * s).astype(dt),  # input gate
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "w_r": (jax.random.normal(k[4], (w, w)) * s).astype(dt),  # recurrence gate
+        "b_r": jnp.zeros((w,), jnp.float32),
+        # Λ init so that a^c spans (0.9, 0.999) as in Griffin
+        "lam": jnp.linspace(0.3, 1.5, w).astype(jnp.float32),
+        "w_out": L.dense_init(k[5], w, d, dt),
+    }
+
+
+def init_attention(rng, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d, h = cfg.d_model, cfg.resolved_head_dim
+    n_q, n_kv = cfg.num_heads * h, cfg.num_kv_heads * h
+    k = jax.random.split(rng, 4)
+    return {
+        "wq": L.dense_init(k[0], d, n_q, dt),
+        "wk": L.dense_init(k[1], d, n_kv, dt),
+        "wv": L.dense_init(k[2], d, n_kv, dt),
+        "wo": L.dense_init(k[3], n_q, d, dt),
+    }
+
+
+def init_mlp(rng, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    k = jax.random.split(rng, 3)
+    return {
+        "w_gate": L.dense_init(k[0], cfg.d_model, cfg.d_ff, dt),
+        "w_up": L.dense_init(k[1], cfg.d_model, cfg.d_ff, dt),
+        "w_down": L.dense_init(k[2], cfg.d_ff, cfg.d_model, dt),
+    }
+
+
+def init_layer(rng, cfg: ModelConfig, kind: str) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(rng)
+    temporal = (init_recurrent(k1, cfg) if kind == "recurrent"
+                else init_attention(k1, cfg))
+    return {
+        "t_norm": jnp.ones((cfg.d_model,), dt),
+        "temporal": temporal,
+        "m_norm": jnp.ones((cfg.d_model,), dt),
+        "mlp": init_mlp(k2, cfg),
+    }
+
+
+def init_super(rng, cfg: ModelConfig) -> Params:
+    pat = cfg.rglru.pattern
+    ks = jax.random.split(rng, len(pat))
+    return {f"l{i}_{kind}": init_layer(ks[i], cfg, kind)
+            for i, kind in enumerate(pat)}
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    n_super, rest = _pattern_layout(cfg)
+    k_emb, k_super, k_rest = jax.random.split(rng, 3)
+    params: Params = {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if n_super:
+        params["super"] = jax.vmap(lambda k: init_super(k, cfg))(
+            jax.random.split(k_super, n_super))
+    params["rest"] = [init_layer(k, cfg, kind) for k, kind in
+                      zip(jax.random.split(k_rest, max(len(rest), 1)), rest)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def rglru_gates(p: Params, x: jax.Array):
+    """Input gate i_t, log-decay log_a_t for inputs x (..., w)."""
+    xf = x.astype(jnp.float32)
+    i_t = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    r_t = jax.nn.sigmoid(xf @ p["w_r"].astype(jnp.float32) + p["b_r"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r_t        # <= 0
+    return i_t, log_a
+
+
+def rglru_scan(p: Params, x: jax.Array, h0: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence RG-LRU via associative scan.  x (B,S,w) → (y, h_final)."""
+    i_t, log_a = rglru_gates(p, x)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i_t * x.astype(jnp.float32))
+    # fold initial state into the first step: h1 = a1 h0 + b1
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    av, hv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hv.astype(x.dtype), hv[:, -1]
+
+
+def recurrent_block(p: Params, cfg: ModelConfig, x: jax.Array, h0, conv0
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence Griffin recurrent block.  Returns (out, h_fin, conv_fin)."""
+    w = _lru_width(cfg)
+    k = cfg.rglru.conv1d_width
+    gate = jax.nn.gelu(L.linear(x, p["w_y"]).astype(jnp.float32))
+    xb = L.linear(x, p["w_x"])
+    # causal conv continuing from conv0 (B, k-1, w)
+    xb_ext = jnp.concatenate([conv0.astype(xb.dtype), xb], axis=1)
+    conv = L.causal_conv1d(xb_ext, p["conv_w"])[:, k - 1:][:, :x.shape[1]]
+    conv = conv + p["conv_b"]
+    conv_fin = xb_ext[:, -(k - 1):] if k > 1 else conv0
+    y, h_fin = rglru_scan(p, conv, h0)
+    out = L.linear((gate * y.astype(jnp.float32)).astype(x.dtype), p["w_out"])
+    return out, h_fin, conv_fin
+
+
+def recurrent_step(p: Params, cfg: ModelConfig, x: jax.Array, h0, conv0
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """O(1) decode step.  x (B, 1, d)."""
+    gate = jax.nn.gelu(L.linear(x, p["w_y"]).astype(jnp.float32))[:, 0]
+    xb = L.linear(x, p["w_x"])[:, 0]                       # (B, w)
+    win = jnp.concatenate([conv0, xb[:, None, :]], axis=1)  # (B, k, w)
+    conv = jnp.einsum("bkw,wk->bw", win.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    i_t, log_a = rglru_gates(p, conv)
+    a = jnp.exp(log_a)
+    h = a * h0 + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i_t * conv)
+    out = L.linear((gate * h).astype(x.dtype)[:, None, :], p["w_out"])
+    return out, h, win[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# local attention with ring-buffer cache
+# ---------------------------------------------------------------------------
+
+def attn_block(p: Params, cfg: ModelConfig, x: jax.Array, positions
+               ) -> jax.Array:
+    b, s, _ = x.shape
+    h = cfg.resolved_head_dim
+    q = L.linear(x, p["wq"]).reshape(b, s, cfg.num_heads, h)
+    k = L.linear(x, p["wk"]).reshape(b, s, cfg.num_kv_heads, h)
+    v = L.linear(x, p["wv"]).reshape(b, s, cfg.num_kv_heads, h)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    win = cfg.rglru.attention_window
+    if s >= 8192:
+        o = L.chunked_causal_attention(q, k, v, window=win)
+    else:
+        o = L.causal_attention(q, k, v, window=win)
+    return L.linear(o.reshape(b, s, -1), p["wo"])
+
+
+def attn_prefill_cache(p, cfg, x, positions):
+    """Build the ring-buffer KV cache after a prefill of static length S."""
+    b, s, _ = x.shape
+    h = cfg.resolved_head_dim
+    win = cfg.rglru.attention_window
+    k = L.linear(x, p["wk"]).reshape(b, s, cfg.num_kv_heads, h)
+    v = L.linear(x, p["wv"]).reshape(b, s, cfg.num_kv_heads, h)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if s >= win:
+        kl, vl = k[:, -win:], v[:, -win:]
+        r = s % win
+        kc = jnp.roll(kl, r, axis=1)
+        vc = jnp.roll(vl, r, axis=1)
+    else:
+        pad = ((0, 0), (0, win - s), (0, 0), (0, 0))
+        kc, vc = jnp.pad(k, pad), jnp.pad(v, pad)
+    return kc, vc
+
+
+def attn_step(p: Params, cfg: ModelConfig, x: jax.Array, kc, vc, pos
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode step against the ring buffer.  x (B,1,d), pos scalar int32."""
+    b = x.shape[0]
+    h = cfg.resolved_head_dim
+    win = cfg.rglru.attention_window
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = L.linear(x, p["wq"]).reshape(b, 1, cfg.num_heads, h)
+    k = L.linear(x, p["wk"]).reshape(b, 1, cfg.num_kv_heads, h)
+    v = L.linear(x, p["wv"]).reshape(b, 1, cfg.num_kv_heads, h)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    slot = jnp.mod(pos, win)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+    o = L.decode_attention(q, kc, vc, jnp.minimum(pos + 1, win))
+    return L.linear(o.reshape(b, 1, -1), p["wo"]), kc, vc
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _mlp(p, cfg, x):
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"], preferred_element_type=jnp.float32)
+    u = jnp.einsum("...d,df->...f", x, p["w_up"], preferred_element_type=jnp.float32)
+    h = (jax.nn.gelu(g) * u).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _layer_fwd(lp: Params, cfg: ModelConfig, x, positions, kind: str,
+               h0=None, conv0=None):
+    """Full-sequence layer.  Returns (x, (h_fin, conv_fin) | None)."""
+    xn = L.rmsnorm(x, lp["t_norm"], cfg.rms_eps)
+    state = None
+    if kind == "recurrent":
+        out, h_fin, conv_fin = recurrent_block(lp["temporal"], cfg, xn, h0, conv0)
+        state = (h_fin, conv_fin)
+    else:
+        out = attn_block(lp["temporal"], cfg, xn, positions)
+    x = constrain_hidden(x + out)
+    x = constrain_hidden(
+        x + _mlp(lp["mlp"], cfg, L.rmsnorm(x, lp["m_norm"], cfg.rms_eps)))
+    return x, state
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            scan_layers: bool = True, remat: bool = False
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    w = _lru_width(cfg)
+    k = cfg.rglru.conv1d_width
+    h0 = jnp.zeros((b, w), jnp.float32)
+    conv0 = jnp.zeros((b, k - 1, w), x.dtype)
+    pat = cfg.rglru.pattern
+    n_super, rest = _pattern_layout(cfg)
+
+    def super_fwd(sp, xc):
+        for i, kind in enumerate(pat):
+            xc, _ = _layer_fwd(sp[f"l{i}_{kind}"], cfg, xc, positions, kind,
+                               h0, conv0)
+        return xc
+
+    if n_super:
+        if scan_layers:
+            fn = (jax.checkpoint(super_fwd,
+                                 policy=jax.checkpoint_policies.nothing_saveable)
+                  if remat else super_fwd)
+            x, _ = jax.lax.scan(lambda c, sp: (fn(sp, c), None), x, params["super"])
+        else:
+            for i in range(n_super):
+                sp = jax.tree.map(lambda a: a[i], params["super"])
+                x = super_fwd(sp, x)
+    for lp, kind in zip(params["rest"], rest):
+        x, _ = _layer_fwd(lp, cfg, x, positions, kind, h0, conv0)
+    x = L.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("...d,dv->...v", x, params["embed"].T,
+                        preferred_element_type=jnp.float32)
+    return logits, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# serving path
+# ---------------------------------------------------------------------------
+
+def _empty_states(cfg: ModelConfig, batch: int, stacked: int | None):
+    """Per-super-block state pytree (optionally with a leading stack axis)."""
+    w = _lru_width(cfg)
+    kk = cfg.rglru.conv1d_width
+    win = cfg.rglru.attention_window
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    pat = cfg.rglru.pattern
+
+    def shp(*s):
+        return (stacked, *s) if stacked is not None else s
+
+    st = {}
+    for i, kind in enumerate(pat):
+        if kind == "recurrent":
+            st[f"l{i}_h"] = jnp.zeros(shp(batch, w), jnp.float32)
+            st[f"l{i}_conv"] = jnp.zeros(shp(batch, kk - 1, w), dt)
+        else:
+            st[f"l{i}_k"] = jnp.zeros(shp(batch, win, cfg.num_kv_heads, hd), dt)
+            st[f"l{i}_v"] = jnp.zeros(shp(batch, win, cfg.num_kv_heads, hd), dt)
+    return st
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """O(1)-in-max_len state: ring-buffer KVs + recurrent states."""
+    del max_len
+    n_super, rest = _pattern_layout(cfg)
+    w = _lru_width(cfg)
+    kk = cfg.rglru.conv1d_width
+    dt = jnp.dtype(cfg.dtype)
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if n_super:
+        cache["super"] = _empty_states(cfg, batch, n_super)
+    cache["rest"] = []
+    for kind in rest:
+        if kind == "recurrent":
+            cache["rest"].append({
+                "h": jnp.zeros((batch, w), jnp.float32),
+                "conv": jnp.zeros((batch, kk - 1, w), dt)})
+        else:
+            win = cfg.rglru.attention_window
+            hd = cfg.resolved_head_dim
+            cache["rest"].append({
+                "k": jnp.zeros((batch, win, cfg.num_kv_heads, hd), dt),
+                "v": jnp.zeros((batch, win, cfg.num_kv_heads, hd), dt)})
+    return cache
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        init_cache(cfg, batch, max_len))
+
+
+def _layer_prefill(lp, cfg, x, positions, kind, h0, conv0):
+    """Full-seq layer that also emits its serving state."""
+    xn = L.rmsnorm(x, lp["t_norm"], cfg.rms_eps)
+    if kind == "recurrent":
+        out, h_fin, conv_fin = recurrent_block(lp["temporal"], cfg, xn, h0, conv0)
+        state = {"h": h_fin, "conv": conv_fin}
+    else:
+        out = attn_block(lp["temporal"], cfg, xn, positions)
+        kc, vc = attn_prefill_cache(lp["temporal"], cfg, xn, positions)
+        state = {"k": kc, "v": vc}
+    x = constrain_hidden(x + out)
+    x = constrain_hidden(
+        x + _mlp(lp["mlp"], cfg, L.rmsnorm(x, lp["m_norm"], cfg.rms_eps)))
+    return x, state
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int) -> Tuple[Params, jax.Array]:
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    w = _lru_width(cfg)
+    kk = cfg.rglru.conv1d_width
+    h0 = jnp.zeros((b, w), jnp.float32)
+    conv0 = jnp.zeros((b, kk - 1, w), x.dtype)
+    pat = cfg.rglru.pattern
+    n_super, rest = _pattern_layout(cfg)
+    cache: Params = {"pos": jnp.int32(s)}
+
+    def super_fwd(xc, sp):
+        states = {}
+        for i, kind in enumerate(pat):
+            xc, st = _layer_prefill(sp[f"l{i}_{kind}"], cfg, xc, positions,
+                                    kind, h0, conv0)
+            if kind == "recurrent":
+                states[f"l{i}_h"] = st["h"]
+                states[f"l{i}_conv"] = st["conv"]
+            else:
+                states[f"l{i}_k"] = st["k"]
+                states[f"l{i}_v"] = st["v"]
+        return xc, states
+
+    if n_super:
+        x, sstates = jax.lax.scan(super_fwd, x, params["super"])
+        cache["super"] = sstates
+    cache["rest"] = []
+    for lp, kind in zip(params["rest"], rest):
+        x, st = _layer_prefill(lp, cfg, x, positions, kind, h0, conv0)
+        cache["rest"].append(st)
+    logits = jnp.einsum("...d,dv->...v",
+                        L.rmsnorm(x[:, -1:, :], params["final_norm"], cfg.rms_eps),
+                        params["embed"].T, preferred_element_type=jnp.float32)
+    return cache, logits
+
+
+def _layer_step(lp, cfg, x, state, kind, pos):
+    xn = L.rmsnorm(x, lp["t_norm"], cfg.rms_eps)
+    if kind == "recurrent":
+        out, h, conv = recurrent_step(lp["temporal"], cfg, xn,
+                                      state["h"], state["conv"])
+        new_state = {"h": h, "conv": conv}
+    else:
+        out, kc, vc = attn_step(lp["temporal"], cfg, xn,
+                                state["k"], state["v"], pos)
+        new_state = {"k": kc, "v": vc}
+    x = x + out
+    x = x + _mlp(lp["mlp"], cfg, L.rmsnorm(x, lp["m_norm"], cfg.rms_eps))
+    return x, new_state
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array) -> Tuple[Params, jax.Array]:
+    x = params["embed"][tokens]
+    pos = cache["pos"]
+    pat = cfg.rglru.pattern
+    n_super, rest = _pattern_layout(cfg)
+    new_cache: Params = {"pos": pos + 1}
+
+    def super_step(xc, scan_in):
+        sp, st = scan_in
+        new_st = {}
+        for i, kind in enumerate(pat):
+            if kind == "recurrent":
+                sub = {"h": st[f"l{i}_h"], "conv": st[f"l{i}_conv"]}
+            else:
+                sub = {"k": st[f"l{i}_k"], "v": st[f"l{i}_v"]}
+            xc, ns = _layer_step(sp[f"l{i}_{kind}"], cfg, xc, sub, kind, pos)
+            if kind == "recurrent":
+                new_st[f"l{i}_h"], new_st[f"l{i}_conv"] = ns["h"], ns["conv"]
+            else:
+                new_st[f"l{i}_k"], new_st[f"l{i}_v"] = ns["k"], ns["v"]
+        return xc, new_st
+
+    if n_super:
+        x, sstates = jax.lax.scan(super_step, x,
+                                  (params["super"], cache["super"]))
+        new_cache["super"] = sstates
+    new_cache["rest"] = []
+    for lp, st, kind in zip(params["rest"], cache["rest"], rest):
+        x, ns = _layer_step(lp, cfg, x, st, kind, pos)
+        new_cache["rest"].append(ns)
+    logits = jnp.einsum("...d,dv->...v",
+                        L.rmsnorm(x, params["final_norm"], cfg.rms_eps),
+                        params["embed"].T, preferred_element_type=jnp.float32)
+    return new_cache, logits

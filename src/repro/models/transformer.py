@@ -1,0 +1,294 @@
+"""Decoder-only GQA transformer — the dense/MoE/VLM LM backbone.
+
+Covers: qwen1.5-110b, phi3-medium-14b, qwen3-14b, qwen2-1.5b, the paper's
+qwen2.5-0.5b/1.5b, the LM backbone of internvl2-1b, and (with ``moe.py``'s
+FFN) the two MoE architectures.
+
+Layer parameters are stacked along a leading layer axis and consumed with
+``jax.lax.scan`` so the lowered HLO is O(1) in depth — essential for the
+94-layer MoE dry-run cells.  ``scan_layers=False`` unrolls (used by the
+dispatch-engine reproduction experiments, which need op-level granularity).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.sharding.activation import constrain_hidden
+
+Params = Dict[str, Any]
+
+# threshold above which prefill switches to the memory-bounded chunked path
+CHUNKED_ATTENTION_MIN_SEQ = 8192
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    d, h = cfg.d_model, cfg.resolved_head_dim
+    n_q, n_kv = cfg.num_heads * h, cfg.num_kv_heads * h
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, n_q, dt),
+        "wk": L.dense_init(ks[1], d, n_kv, dt),
+        "wv": L.dense_init(ks[2], d, n_kv, dt),
+        "wo": L.dense_init(ks[3], n_q, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_q,), dt)
+        p["bk"] = jnp.zeros((n_kv,), dt)
+        p["bv"] = jnp.zeros((n_kv,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((h,), dt)
+        p["k_norm"] = jnp.ones((h,), dt)
+    return p
+
+
+def init_ffn(rng, cfg: ModelConfig) -> Params:
+    if cfg.moe is not None:
+        return moe_mod.init_moe_ffn(rng, cfg)
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": L.dense_init(ks[0], cfg.d_model, cfg.d_ff, dt),
+        "w_up": L.dense_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+        "w_down": L.dense_init(ks[2], cfg.d_ff, cfg.d_model, dt),
+    }
+
+
+def init_block(rng, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(rng)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": init_attention(k1, cfg),
+        "ffn_norm": jnp.ones((cfg.d_model,), dt),
+        "ffn": init_ffn(k2, cfg),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    k_emb, k_blocks, k_head = jax.random.split(rng, 3)
+    block_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    params: Params = {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward pieces
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p: Params, cfg: ModelConfig, x: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    h = cfg.resolved_head_dim
+    q = L.linear(x, p["wq"], p.get("bq"))
+    k = L.linear(x, p["wk"], p.get("bk"))
+    v = L.linear(x, p["wv"], p.get("bv"))
+    q = q.reshape(b, s, cfg.num_heads, h)
+    k = k.reshape(b, s, cfg.num_kv_heads, h)
+    v = v.reshape(b, s, cfg.num_kv_heads, h)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"], cfg.rms_eps)
+        k = L.rmsnorm(k, p["k_norm"], cfg.rms_eps)
+    return q, k, v
+
+
+def attention_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array, *, chunked: bool) -> jax.Array:
+    """Full-sequence causal self-attention (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if chunked:
+        o = L.chunked_causal_attention(q, k, v, window=cfg.sliding_window)
+    else:
+        o = L.causal_attention(q, k, v, window=cfg.sliding_window)
+    return L.linear(o.reshape(b, s, -1), p["wo"])
+
+
+def ffn_block(p: Params, cfg: ModelConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out, aux_loss) — aux is the MoE load-balance loss (0 dense)."""
+    if cfg.moe is not None:
+        return moe_mod.moe_ffn(p, cfg, x)
+    return L.swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), jnp.float32(0.0)
+
+
+def block_forward(p: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, *, chunked: bool
+                  ) -> Tuple[jax.Array, jax.Array]:
+    h = x + attention_block(p["attn"], cfg,
+                            L.rmsnorm(x, p["attn_norm"], cfg.rms_eps),
+                            positions, chunked=chunked)
+    h = constrain_hidden(h)  # sequence-parallel boundary (no-op by default)
+    f, aux = ffn_block(p["ffn"], cfg, L.rmsnorm(h, p["ffn_norm"], cfg.rms_eps))
+    return constrain_hidden(h + f), aux
+
+
+def unembed(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = L.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("...d,dv->...v", x, w, preferred_element_type=jnp.float32)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            scan_layers: bool = True, remat: bool = False,
+            extra_embeds: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced forward.  tokens (B, S) int32 → (logits (B,S,V), aux).
+
+    ``extra_embeds`` (B, P, d_model): a prefix of precomputed embeddings
+    (VLM patch embeddings); logits are returned for the token part only.
+    """
+    x = params["embed"][tokens]
+    prefix = 0
+    if extra_embeds is not None:
+        prefix = extra_embeds.shape[1]
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    chunked = s >= CHUNKED_ATTENTION_MIN_SEQ
+
+    body = functools.partial(block_forward, cfg=cfg, positions=positions,
+                             chunked=chunked)
+    if scan_layers:
+        def scan_body(carry, layer_params):
+            fn = body
+            if remat:
+                fn = jax.checkpoint(
+                    lambda p_, x_: body(p_, x=x_),
+                    policy=jax.checkpoint_policies.nothing_saveable)
+                y, aux = fn(layer_params, carry)
+            else:
+                y, aux = fn(layer_params, x=carry)
+            return y, aux
+        x, auxs = jax.lax.scan(scan_body, x, params["blocks"])
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.float32(0.0)
+        n = cfg.num_layers
+        for i in range(n):
+            layer_params = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, a = body(layer_params, x=x)
+            aux = aux + a
+    logits = unembed(params, cfg, x)
+    if prefix:
+        logits = logits[:, prefix:]
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# KV cache serving path
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dt = _dtype(cfg)
+    h = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, h)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """ShapeDtypeStruct cache (no allocation) for dry-run lowering."""
+    dt = _dtype(cfg)
+    h = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, h)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dt),
+        "v": jax.ShapeDtypeStruct(shape, dt),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int, *, extra_embeds: Optional[jax.Array] = None
+            ) -> Tuple[Params, jax.Array]:
+    """Run the prompt, build the cache.  Returns (cache, last-token logits)."""
+    x = params["embed"][tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    chunked = s >= CHUNKED_ATTENTION_MIN_SEQ
+    h = cfg.resolved_head_dim
+
+    def scan_body(carry, layer_params):
+        xc = carry
+        p = layer_params
+        xn = L.rmsnorm(xc, p["attn_norm"], cfg.rms_eps)
+        q, k, v = _project_qkv(p["attn"], cfg, xn)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        if chunked:
+            o = L.chunked_causal_attention(q, k, v, window=cfg.sliding_window)
+        else:
+            o = L.causal_attention(q, k, v, window=cfg.sliding_window)
+        xc = constrain_hidden(xc + L.linear(o.reshape(b, s, -1),
+                                            p["attn"]["wo"]))
+        f, _ = ffn_block(p["ffn"], cfg, L.rmsnorm(xc, p["ffn_norm"], cfg.rms_eps))
+        xc = constrain_hidden(xc + f)
+        kc = jnp.zeros((b, max_len, cfg.num_kv_heads, h), k.dtype)
+        vc = jnp.zeros_like(kc)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+        return xc, (kc, vc)
+
+    x, (kcache, vcache) = jax.lax.scan(scan_body, x, params["blocks"])
+    logits = unembed(params, cfg, x[:, -1:, :])
+    cache = {"k": kcache, "v": vcache, "pos": jnp.int32(s)}
+    return cache, logits
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array) -> Tuple[Params, jax.Array]:
+    """One autoregressive step.  tokens (B, 1) → (cache', logits (B,1,V))."""
+    x = params["embed"][tokens]
+    b = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def scan_body(carry, scan_in):
+        xc = carry
+        p, kc, vc = scan_in
+        xn = L.rmsnorm(xc, p["attn_norm"], cfg.rms_eps)
+        q, k, v = _project_qkv(p["attn"], cfg, xn)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        o = L.decode_attention(q, kc, vc, pos + 1, window=cfg.sliding_window)
+        xc = xc + L.linear(o.reshape(b, 1, -1), p["attn"]["wo"])
+        f, _ = ffn_block(p["ffn"], cfg, L.rmsnorm(xc, p["ffn_norm"], cfg.rms_eps))
+        return xc + f, (kc, vc)
+
+    x, (kcache, vcache) = jax.lax.scan(
+        scan_body, x, (params["blocks"], cache["k"], cache["v"]))
+    logits = unembed(params, cfg, x)
+    return {"k": kcache, "v": vcache, "pos": pos + 1}, logits

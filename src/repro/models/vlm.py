@@ -1,0 +1,64 @@
+"""InternVL2-1B [vlm] — InternViT (stub) + Qwen2-0.5B-style LM backbone.
+
+Per the assignment the vision tower is a STUB: ``input_specs()`` supplies
+precomputed patch embeddings ``(B, num_patches, vit_d_model)``.  This module
+owns the multimodal projector (ViT width → LM width) and delegates the LM to
+``transformer.py``; image patches are a prefix in the LM sequence.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    k_lm, k_proj = jax.random.split(rng)
+    dt = jnp.dtype(cfg.dtype)
+    e = cfg.encoder
+    return {
+        "lm": T.init_params(k_lm, cfg),
+        "proj_w": L.dense_init(k_proj, e.d_model, cfg.d_model, dt),
+        "proj_b": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def project(params: Params, patch_embeds: jax.Array) -> jax.Array:
+    x = patch_embeds.astype(params["proj_w"].dtype)
+    return L.linear(x, params["proj_w"], params["proj_b"])
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            patch_embeds: jax.Array, *, scan_layers: bool = True,
+            remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    prefix = project(params, patch_embeds)
+    return T.forward(params["lm"], cfg, tokens, scan_layers=scan_layers,
+                     remat=remat, extra_embeds=prefix)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    # cache must hold image prefix + text
+    return T.init_cache(cfg, batch, max_len + cfg.encoder.num_positions)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return T.cache_spec(cfg, batch, max_len + cfg.encoder.num_positions)
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            patch_embeds: jax.Array, max_len: int) -> Tuple[Params, jax.Array]:
+    prefix = project(params, patch_embeds)
+    return T.prefill(params["lm"], cfg, tokens,
+                     max_len + cfg.encoder.num_positions, extra_embeds=prefix)
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array) -> Tuple[Params, jax.Array]:
+    return T.decode_step(params["lm"], cfg, cache, tokens)

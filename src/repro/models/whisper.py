@@ -1,0 +1,280 @@
+"""Whisper-tiny (arXiv:2212.04356) — encoder-decoder transformer backbone.
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings ``(B, 1500, d_model)``.  The encoder
+is a bidirectional pre-LN transformer over those frames; the decoder is a
+causal transformer with cross-attention.  Decode serving keeps a self-KV
+cache plus the per-layer cross K/V (computed once at prefill).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.activation import constrain_hidden
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn(rng, cfg: ModelConfig, d: int, heads: int) -> Params:
+    hd = d // heads
+    n = heads * hd
+    k = jax.random.split(rng, 4)
+    dt = _dt(cfg)
+    return {
+        "wq": L.dense_init(k[0], d, n, dt), "bq": jnp.zeros((n,), dt),
+        "wk": L.dense_init(k[1], d, n, dt),
+        "wv": L.dense_init(k[2], d, n, dt), "bv": jnp.zeros((n,), dt),
+        "wo": L.dense_init(k[3], n, d, dt), "bo": jnp.zeros((d,), dt),
+    }
+
+
+def _init_mlp(rng, cfg: ModelConfig, d: int, f: int) -> Params:
+    k1, k2 = jax.random.split(rng)
+    dt = _dt(cfg)
+    return {
+        "w_in": L.dense_init(k1, d, f, dt), "b_in": jnp.zeros((f,), dt),
+        "w_out": L.dense_init(k2, f, d, dt), "b_out": jnp.zeros((d,), dt),
+    }
+
+
+def _ln(cfg, d):
+    return {"w": jnp.ones((d,), _dt(cfg)), "b": jnp.zeros((d,), _dt(cfg))}
+
+
+def init_enc_block(rng, cfg: ModelConfig) -> Params:
+    e = cfg.encoder
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": _ln(cfg, e.d_model),
+        "attn": _init_attn(k1, cfg, e.d_model, e.num_heads),
+        "ln2": _ln(cfg, e.d_model),
+        "mlp": _init_mlp(k2, cfg, e.d_model, e.d_ff),
+    }
+
+
+def init_dec_block(rng, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d = cfg.d_model
+    return {
+        "ln1": _ln(cfg, d),
+        "self_attn": _init_attn(k1, cfg, d, cfg.num_heads),
+        "ln2": _ln(cfg, d),
+        "cross_attn": _init_attn(k2, cfg, d, cfg.num_heads),
+        "ln3": _ln(cfg, d),
+        "mlp": _init_mlp(k3, cfg, d, cfg.d_ff),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    e = cfg.encoder
+    k_emb, k_enc, k_dec = jax.random.split(rng, 3)
+    enc_blocks = jax.vmap(lambda k: init_enc_block(k, cfg))(
+        jax.random.split(k_enc, e.num_layers))
+    dec_blocks = jax.vmap(lambda k: init_dec_block(k, cfg))(
+        jax.random.split(k_dec, cfg.num_layers))
+    return {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, _dt(cfg)),
+        "enc_blocks": enc_blocks,
+        "enc_ln": _ln(cfg, e.d_model),
+        "dec_blocks": dec_blocks,
+        "dec_ln": _ln(cfg, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# attention helpers (bias + LayerNorm, Whisper style; no RoPE — sinusoidal)
+# ---------------------------------------------------------------------------
+
+def _heads(x, n):
+    b, s, d = x.shape
+    return x.reshape(b, s, n, d // n)
+
+
+def _self_attn(p, x, heads: int, *, causal: bool, q_offset: int = 0):
+    q = _heads(L.linear(x, p["wq"], p["bq"]), heads)
+    k = _heads(L.linear(x, p["wk"]), heads)
+    v = _heads(L.linear(x, p["wv"], p["bv"]), heads)
+    if causal:
+        o = L.causal_attention(q, k, v, q_offset=q_offset)
+    else:
+        o = L.full_attention(q, k, v)
+    b, s = x.shape[:2]
+    return L.linear(o.reshape(b, s, -1), p["wo"], p["bo"]), k, v
+
+
+def _cross_attn(p, x, kv_src_k, kv_src_v, heads: int):
+    q = _heads(L.linear(x, p["wq"], p["bq"]), heads)
+    o = L.full_attention(q, kv_src_k, kv_src_v)
+    b, s = x.shape[:2]
+    return L.linear(o.reshape(b, s, -1), p["wo"], p["bo"])
+
+
+def cross_kv(p, enc_out, heads: int):
+    k = _heads(L.linear(enc_out, p["wk"]), heads)
+    v = _heads(L.linear(enc_out, p["wv"], p["bv"]), heads)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# encoder / decoder
+# ---------------------------------------------------------------------------
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames (B, P, enc.d_model) — stub-frontend output — → encoder states."""
+    e = cfg.encoder
+    x = frames.astype(_dt(cfg))
+    x = x + L.sinusoidal_positions(x.shape[1], e.d_model).astype(x.dtype)[None]
+
+    def body(xc, p):
+        a, _, _ = _self_attn(p["attn"], L.layernorm(xc, p["ln1"]["w"], p["ln1"]["b"]),
+                             e.num_heads, causal=False)
+        xc = xc + a
+        m = L.gelu_mlp(L.layernorm(xc, p["ln2"]["w"], p["ln2"]["b"]),
+                       p["mlp"]["w_in"], p["mlp"]["b_in"],
+                       p["mlp"]["w_out"], p["mlp"]["b_out"])
+        return constrain_hidden(xc + m), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.layernorm(x, params["enc_ln"]["w"], params["enc_ln"]["b"])
+
+
+def decode_full(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                enc_out: jax.Array) -> jax.Array:
+    """Teacher-forced decoder.  tokens (B, S) → logits (B, S, V)."""
+    x = params["embed"][tokens]
+    s = x.shape[1]
+    x = x + L.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+
+    def body(xc, p):
+        a, _, _ = _self_attn(p["self_attn"],
+                             L.layernorm(xc, p["ln1"]["w"], p["ln1"]["b"]),
+                             cfg.num_heads, causal=True)
+        xc = xc + a
+        ck, cv = cross_kv(p["cross_attn"], enc_out, cfg.num_heads)
+        c = _cross_attn(p["cross_attn"],
+                        L.layernorm(xc, p["ln2"]["w"], p["ln2"]["b"]), ck, cv,
+                        cfg.num_heads)
+        xc = xc + c
+        m = L.gelu_mlp(L.layernorm(xc, p["ln3"]["w"], p["ln3"]["b"]),
+                       p["mlp"]["w_in"], p["mlp"]["b_in"],
+                       p["mlp"]["w_out"], p["mlp"]["b_out"])
+        return constrain_hidden(xc + m), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.layernorm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+    return jnp.einsum("...d,dv->...v", x, params["embed"].T,
+                      preferred_element_type=jnp.float32)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            frames: jax.Array, **_) -> Tuple[jax.Array, jax.Array]:
+    enc_out = encode(params, cfg, frames)
+    return decode_full(params, cfg, tokens, enc_out), jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dt = _dt(cfg)
+    hd = cfg.d_model // cfg.num_heads
+    e = cfg.encoder
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_heads, hd), dt),
+        "v": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_heads, hd), dt),
+        "ck": jnp.zeros((cfg.num_layers, batch, e.num_positions, cfg.num_heads, hd), dt),
+        "cv": jnp.zeros((cfg.num_layers, batch, e.num_positions, cfg.num_heads, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        init_cache(cfg, batch, max_len))
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            frames: jax.Array, max_len: int) -> Tuple[Params, jax.Array]:
+    enc_out = encode(params, cfg, frames)
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    x = x + L.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+    hd = cfg.d_model // cfg.num_heads
+
+    def body(xc, p):
+        a, k, v = _self_attn(p["self_attn"],
+                             L.layernorm(xc, p["ln1"]["w"], p["ln1"]["b"]),
+                             cfg.num_heads, causal=True)
+        xc = xc + a
+        ck, cv = cross_kv(p["cross_attn"], enc_out, cfg.num_heads)
+        c = _cross_attn(p["cross_attn"],
+                        L.layernorm(xc, p["ln2"]["w"], p["ln2"]["b"]), ck, cv,
+                        cfg.num_heads)
+        xc = xc + c
+        m = L.gelu_mlp(L.layernorm(xc, p["ln3"]["w"], p["ln3"]["b"]),
+                       p["mlp"]["w_in"], p["mlp"]["b_in"],
+                       p["mlp"]["w_out"], p["mlp"]["b_out"])
+        kc = jnp.zeros((b, max_len, cfg.num_heads, hd), k.dtype)
+        vc = jnp.zeros_like(kc)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+        return xc + m, (kc, vc, ck, cv)
+
+    x, (kc, vc, ck, cv) = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.layernorm(x[:, -1:], params["dec_ln"]["w"], params["dec_ln"]["b"])
+    logits = jnp.einsum("...d,dv->...v", x, params["embed"].T,
+                        preferred_element_type=jnp.float32)
+    return {"k": kc, "v": vc, "ck": ck, "cv": cv, "pos": jnp.int32(s)}, logits
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array) -> Tuple[Params, jax.Array]:
+    x = params["embed"][tokens]
+    b = x.shape[0]
+    pos = cache["pos"]
+    # sinusoidal position of the current step
+    postbl = L.sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(postbl, pos, 1, axis=0)[None].astype(x.dtype)
+    hd = cfg.d_model // cfg.num_heads
+
+    def body(xc, scan_in):
+        p, kc, vc, ck, cv = scan_in
+        xn = L.layernorm(xc, p["ln1"]["w"], p["ln1"]["b"])
+        q = _heads(L.linear(xn, p["self_attn"]["wq"], p["self_attn"]["bq"]), cfg.num_heads)
+        k = _heads(L.linear(xn, p["self_attn"]["wk"]), cfg.num_heads)
+        v = _heads(L.linear(xn, p["self_attn"]["wv"], p["self_attn"]["bv"]), cfg.num_heads)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        o = L.decode_attention(q, kc, vc, pos + 1)
+        xc = xc + L.linear(o.reshape(b, 1, -1), p["self_attn"]["wo"],
+                           p["self_attn"]["bo"])
+        c = _cross_attn(p["cross_attn"],
+                        L.layernorm(xc, p["ln2"]["w"], p["ln2"]["b"]), ck, cv,
+                        cfg.num_heads)
+        xc = xc + c
+        m = L.gelu_mlp(L.layernorm(xc, p["ln3"]["w"], p["ln3"]["b"]),
+                       p["mlp"]["w_in"], p["mlp"]["b_in"],
+                       p["mlp"]["w_out"], p["mlp"]["b_out"])
+        return xc + m, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(body, x, (params["dec_blocks"], cache["k"],
+                                         cache["v"], cache["ck"], cache["cv"]))
+    x = L.layernorm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+    logits = jnp.einsum("...d,dv->...v", x, params["embed"].T,
+                        preferred_element_type=jnp.float32)
+    return {"k": kc, "v": vc, "ck": cache["ck"], "cv": cache["cv"],
+            "pos": pos + 1}, logits

@@ -1,0 +1,4 @@
+"""Batch-1 autoregressive serving — the paper's benchmark regime."""
+from repro.serving.engine import GenerationEngine, GenerationResult
+
+__all__ = ["GenerationEngine", "GenerationResult"]

@@ -1,0 +1,54 @@
+"""KV-cache utilities bridging the model cache layout (stacked layer axis)
+and the dispatch-graph layout (one named input per layer)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def empty_graph_cache(cfg: ModelConfig, batch: int, max_len: int
+                      ) -> Dict[str, jax.Array]:
+    """Per-layer cache inputs for a decode OpGraph."""
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, jax.Array] = {}
+    for i in range(cfg.num_layers):
+        out[f"k_cache_{i}"] = jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dt)
+        out[f"v_cache_{i}"] = jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dt)
+    return out
+
+
+def load_prefix(graph_cache: Dict[str, jax.Array], prefill_out: Dict[str, Any],
+                num_layers: int) -> Dict[str, jax.Array]:
+    """Write prefill K/V prefixes (B, prompt, KV, hd) into max_len caches."""
+    out = dict(graph_cache)
+    for i in range(num_layers):
+        kp, vp = prefill_out[f"k_prefix_{i}"], prefill_out[f"v_prefix_{i}"]
+        out[f"k_cache_{i}"] = jax.lax.dynamic_update_slice(
+            out[f"k_cache_{i}"], kp.astype(out[f"k_cache_{i}"].dtype), (0, 0, 0, 0))
+        out[f"v_cache_{i}"] = jax.lax.dynamic_update_slice(
+            out[f"v_cache_{i}"], vp.astype(out[f"v_cache_{i}"].dtype), (0, 0, 0, 0))
+    return out
+
+
+def stacked_to_graph(cache: Dict[str, jax.Array], num_layers: int
+                     ) -> Dict[str, jax.Array]:
+    """Model cache {"k": (L,B,S,KV,hd), ...} → per-layer graph inputs."""
+    out: Dict[str, jax.Array] = {}
+    for i in range(num_layers):
+        out[f"k_cache_{i}"] = cache["k"][i]
+        out[f"v_cache_{i}"] = cache["v"][i]
+    return out
+
+
+def graph_to_stacked(inputs: Dict[str, jax.Array], num_layers: int,
+                     pos) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.stack([inputs[f"k_cache_{i}"] for i in range(num_layers)]),
+        "v": jnp.stack([inputs[f"v_cache_{i}"] for i in range(num_layers)]),
+        "pos": jnp.asarray(pos, jnp.int32),
+    }

@@ -1,0 +1,32 @@
+"""Token samplers.  The paper uses greedy (argmax) decoding with a per-token
+GPU→CPU readback; on-device sampling variants support the beyond-paper
+single-dispatch generation loop."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    kind: str = "greedy"         # greedy | temperature | topk
+    temperature: float = 1.0
+    top_k: int = 40
+
+
+def sample(logits: jax.Array, cfg: SamplerConfig,
+           rng: Optional[jax.Array] = None) -> jax.Array:
+    """logits (..., V) → token ids (...), int32.  Traceable (usable inside
+    lax loops for on-device generation)."""
+    if cfg.kind == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / jnp.maximum(cfg.temperature, 1e-6)
+    if cfg.kind == "topk":
+        v, _ = jax.lax.top_k(lf, cfg.top_k)
+        cutoff = v[..., -1:]
+        lf = jnp.where(lf < cutoff, -jnp.inf, lf)
+    assert rng is not None, "stochastic sampling needs a PRNG key"
+    return jax.random.categorical(rng, lf, axis=-1).astype(jnp.int32)

@@ -1,0 +1,8 @@
+"""Sharding rules: logical-parameter → PartitionSpec mapping for the
+production meshes (DP × TP × EP, with an outer pod axis)."""
+from repro.sharding.rules import (batch_pspecs, batch_shardings, cache_pspecs,
+                                  data_axes, param_pspecs, param_shardings,
+                                  state_shardings)
+
+__all__ = ["param_pspecs", "param_shardings", "batch_pspecs",
+           "batch_shardings", "cache_pspecs", "state_shardings", "data_axes"]

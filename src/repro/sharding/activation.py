@@ -1,0 +1,75 @@
+"""Activation-sharding policy (sequence parallelism).
+
+Megatron-SP for GSPMD: pin hidden states ``(B, S, d)`` to a
+sequence-sharded layout at layer boundaries.  Row-parallel partial-sum
+all-reduces then lower to reduce-scatter (+ later all-gather where a
+replicated view is required) — half the link traffic — and long-sequence
+attention keeps its q-blocks chip-local instead of devolving into
+per-block partial-`hd` all-reduces (the qwen3 prefill pathology,
+§Perf iteration 3).
+
+Enabled by the launcher via ``activation_policy(...)``; model code calls
+``constrain_hidden`` which is a no-op when no policy is active, so smoke
+tests and single-device runs are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_POLICY: Optional[P] = None
+_MOE_POLICY: Optional[P] = None
+
+
+@contextlib.contextmanager
+def activation_policy(hidden_spec: Optional[P],
+                      moe_spec: Optional[P] = None):
+    """Install PartitionSpecs for (B, S, d) hiddens and (nc, E, C, d)
+    MoE expert blocks."""
+    global _POLICY, _MOE_POLICY
+    prev, prev_moe = _POLICY, _MOE_POLICY
+    _POLICY = hidden_spec
+    _MOE_POLICY = moe_spec
+    try:
+        yield
+    finally:
+        _POLICY = prev
+        _MOE_POLICY = prev_moe
+
+
+def sequence_parallel_spec(mesh) -> P:
+    """The standard SP layout: batch over data axes, sequence over model."""
+    from repro.sharding.rules import data_axes
+    return P(data_axes(mesh), "model", None)
+
+
+def moe_block_spec(mesh) -> P:
+    """(chunks, E, C, d): chunks over data, experts over model — demanding
+    this layout turns the expert exchange into the canonical MoE
+    all-to-all instead of a full xe all-gather (§Perf iteration 6)."""
+    from repro.sharding.rules import data_axes
+    return P(data_axes(mesh), "model", None, None)
+
+
+def constrain_hidden(x: jax.Array) -> jax.Array:
+    """Apply the active policy to a (B, S, d) hidden-state tensor."""
+    if _POLICY is None or x.ndim != 3:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, _POLICY)
+    except Exception:
+        return x  # outside a mesh context (e.g. smoke tests)
+
+
+def constrain_moe_block(x: jax.Array) -> jax.Array:
+    """Apply the MoE policy to a (chunks, E, C, *) expert block."""
+    if _MOE_POLICY is None or x.ndim < 3:
+        return x
+    spec = P(*(list(_MOE_POLICY)[:2] + [None] * (x.ndim - 2)))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

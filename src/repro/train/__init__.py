@@ -1,0 +1,8 @@
+"""Training substrate: optimizer, data pipeline, checkpointing, trainer
+loop with fault tolerance — everything the paper's E2E system needed from
+its host framework, built in JAX."""
+from repro.train.optimizer import AdamWConfig, adamw, cosine_schedule
+from repro.train.trainer import Trainer, TrainConfig, TrainState, make_train_step
+
+__all__ = ["AdamWConfig", "adamw", "cosine_schedule", "Trainer",
+           "TrainConfig", "TrainState", "make_train_step"]

@@ -1,0 +1,124 @@
+"""Data pipeline: deterministic synthetic LM stream + memmap corpus reader,
+with a background prefetch queue.
+
+Determinism contract: sample content is a pure function of
+(seed, shard, step) — restart-safe and reproducible across process counts,
+which the checkpoint/auto-resume path relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    batch: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+    shard: int = 0          # data-parallel shard index
+    num_shards: int = 1
+    path: Optional[str] = None  # memmap token file (uint16/uint32); None = synthetic
+
+
+class SyntheticLM:
+    """Zipf-ish token stream, deterministic per (seed, shard, step)."""
+
+    def __init__(self, cfg: DataConfig) -> None:
+        self.cfg = cfg
+        # Zipf-like unigram distribution — more realistic loss curves than uniform
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self._p = p / p.sum()
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([c.seed, c.shard, step]))
+        toks = rng.choice(c.vocab_size, size=(c.batch, c.seq_len + 1),
+                          p=self._p).astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class MemmapLM:
+    """Flat token-id file → sequential windows, strided across shards."""
+
+    def __init__(self, cfg: DataConfig, dtype=np.uint16) -> None:
+        assert cfg.path is not None
+        self.cfg = cfg
+        self._data = np.memmap(cfg.path, dtype=dtype, mode="r")
+        self._n_windows = (len(self._data) - 1) // cfg.seq_len
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        s = c.seq_len
+        out = np.zeros((c.batch, s + 1), np.int32)
+        for i in range(c.batch):
+            w = (step * c.num_shards * c.batch + c.shard * c.batch + i) \
+                % self._n_windows
+            out[i] = self._data[w * s:w * s + s + 1]
+        return {"tokens": out[:, :-1], "labels": out[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch: hides host-side batch assembly behind
+    device compute — the data-pipeline half of compute/IO overlap."""
+
+    _SENTINEL = object()
+
+    def __init__(self, it: Iterator, depth: int = 2) -> None:
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+
+        def worker():
+            try:
+                for item in it:
+                    self._q.put(item)
+            except BaseException as e:  # surfaced on next()
+                self._err = e
+            finally:
+                self._q.put(self._SENTINEL)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._SENTINEL:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+def make_dataset(cfg: DataConfig, *, start_step: int = 0, prefetch: int = 2):
+    """Iterator over batches resuming at ``start_step`` (auto-resume)."""
+    ds = MemmapLM(cfg) if cfg.path else SyntheticLM(cfg)
+
+    def gen():
+        step = start_step
+        while True:
+            yield ds.batch_at(step)
+            step += 1
+
+    return Prefetcher(gen(), depth=prefetch) if prefetch else gen()

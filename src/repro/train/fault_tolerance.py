@@ -1,0 +1,93 @@
+"""Fault-tolerance runtime: step retry, failure injection (for tests),
+straggler detection — the 1000-node posture of the training loop.
+
+On a real multi-pod deployment a node loss surfaces as a collective error /
+heartbeat timeout; the recovery path is identical to the one exercised
+here: abort the step, restore the latest committed checkpoint (possibly
+onto a smaller mesh — see ``dist.elastic``), and continue from the
+deterministic data cursor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import statistics
+import time
+from typing import Callable, Dict, List, Optional, Set
+
+log = logging.getLogger("repro.fault")
+
+
+class InjectedFailure(RuntimeError):
+    """A test-injected fault (stands in for node loss / collective abort)."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministically fail chosen steps — lets tests exercise the
+    retry/restore path without real hardware faults."""
+
+    fail_steps: Set[int] = dataclasses.field(default_factory=set)
+    failures_per_step: int = 1
+    _counts: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_steps:
+            n = self._counts.get(step, 0)
+            if n < self.failures_per_step:
+                self._counts[step] = n + 1
+                raise InjectedFailure(f"injected failure at step {step} (#{n + 1})")
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Flags steps whose wall time exceeds ``threshold ×`` the running
+    median — the host-side detection half of straggler mitigation.  On a
+    real fleet the flagged host is drained/replaced; here we record and
+    expose the event stream."""
+
+    window: int = 50
+    threshold: float = 3.0
+    _times: List[float] = dataclasses.field(default_factory=list)
+    events: List[Dict] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        hist = self._times[-self.window:]
+        is_straggler = False
+        if len(hist) >= 10:
+            med = statistics.median(hist)
+            if seconds > self.threshold * med:
+                is_straggler = True
+                self.events.append({"step": step, "seconds": seconds,
+                                    "median": med})
+                log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                            step, seconds, med)
+        self._times.append(seconds)
+        return is_straggler
+
+    @property
+    def median_step_s(self) -> Optional[float]:
+        return statistics.median(self._times) if self._times else None
+
+
+def run_with_retries(fn: Callable[[], None], *, max_retries: int = 3,
+                     on_failure: Optional[Callable[[BaseException, int], None]] = None,
+                     backoff_s: float = 0.0) -> None:
+    """Execute ``fn`` retrying on failure; ``on_failure(exc, attempt)`` is
+    the restore hook (reload checkpoint, rebuild state)."""
+    attempt = 0
+    while True:
+        try:
+            fn()
+            return
+        except KeyboardInterrupt:
+            raise
+        except BaseException as e:
+            attempt += 1
+            if attempt > max_retries:
+                raise
+            log.warning("step failed (%s); retry %d/%d", e, attempt, max_retries)
+            if on_failure is not None:
+                on_failure(e, attempt)
+            if backoff_s:
+                time.sleep(backoff_s * attempt)

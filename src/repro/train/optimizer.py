@@ -1,0 +1,89 @@
+"""AdamW + schedules, from scratch (no optax in this environment).
+
+Functional API mirroring optax: ``init(params) → state``,
+``update(grads, state, params) → (new_params, new_state, metrics)``.
+Moments are float32 regardless of parameter dtype (bf16-safe); global-norm
+clipping and decoupled weight decay included.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # schedule
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    """Linear warmup → cosine decay to ``min_lr_ratio · lr``."""
+
+    def lr(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+        prog = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = cfg.lr * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio)
+                        * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.float32(0.0)))
+
+
+class adamw:
+    """AdamW with global-norm clipping and cosine LR."""
+
+    def __init__(self, cfg: AdamWConfig) -> None:
+        self.cfg = cfg
+        self.schedule = cosine_schedule(cfg)
+
+    def init(self, params) -> Dict[str, Any]:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params
+               ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+        cfg = self.cfg
+        count = state["count"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        m = jax.tree.map(lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda vv, g: cfg.b2 * vv + (1 - cfg.b2) * jnp.square(g),
+                         state["v"], grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1 ** c
+        bc2 = 1.0 - cfg.b2 ** c
+        lr = self.schedule(count)
+
+        def step(p, mm, vv):
+            upd = (mm / bc1) / (jnp.sqrt(vv / bc2) + cfg.eps)
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(step, params, m, v)
+        new_state = {"m": m, "v": v, "count": count}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

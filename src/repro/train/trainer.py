@@ -1,0 +1,165 @@
+"""Training loop: jitted train step (grad-accumulation scan, donated state),
+checkpoint/auto-resume, failure retry, straggler monitoring.
+
+The step function is pure and mesh-agnostic: under a mesh with sharded
+``in_shardings`` it is the multi-pod production step (see ``launch/train.py``
+and ``launch/dryrun.py``); on one CPU device it is the smoke-test step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.factory import Model
+from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import (FailureInjector, StragglerMonitor,
+                                         run_with_retries)
+from repro.train.optimizer import AdamWConfig, adamw
+
+log = logging.getLogger("repro.train")
+
+TrainState = Dict[str, Any]  # {"params", "opt", "step"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    grad_accum: int = 1
+    remat: bool = False
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    ckpt_dir: Optional[str] = None
+    max_retries: int = 3
+    optimizer: AdamWConfig = AdamWConfig()
+
+
+def init_state(model: Model, rng, opt: adamw) -> TrainState:
+    params = model.init_params(rng)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(model: Model, opt: adamw, *, grad_accum: int = 1,
+                    remat: bool = False
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Build the pure train step.
+
+    grad_accum > 1 splits the batch into microbatches consumed by a
+    ``lax.scan`` — the standard compute/memory trade and, on real meshes,
+    the loop XLA uses to overlap gradient collectives with the next
+    microbatch's compute (latency hiding).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        params = state["params"]
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]), batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, loss), _ = jax.lax.scan(accum, (zeros, jnp.float32(0.0)),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            metrics = {}
+        new_params, new_opt, opt_metrics = opt.update(grads, state["opt"],
+                                                      params)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, **opt_metrics}
+
+    return train_step
+
+
+class Trainer:
+    """Drives the jitted step with checkpointing + fault tolerance."""
+
+    def __init__(self, model: Model, cfg: TrainConfig, *,
+                 rng=None, injector: Optional[FailureInjector] = None,
+                 jit: bool = True) -> None:
+        self.model = model
+        self.cfg = cfg
+        self.opt = adamw(cfg.optimizer)
+        self.injector = injector
+        self.straggler = StragglerMonitor()
+        self.history: list[Dict] = []
+        step_fn = make_train_step(model, self.opt,
+                                  grad_accum=cfg.grad_accum, remat=cfg.remat)
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0,)) if jit else step_fn
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        self._rng = rng
+        self.state = self._init_or_resume(rng)
+
+    # ------------------------------------------------------------------
+    def _init_or_resume(self, rng) -> TrainState:
+        if self.cfg.ckpt_dir:
+            latest = ckpt.latest_step(self.cfg.ckpt_dir)
+            if latest is not None:
+                log.info("auto-resume from step %d", latest)
+                _, state = ckpt.restore(self.cfg.ckpt_dir, latest)
+                return state
+        return init_state(self.model, rng, self.opt)
+
+    @property
+    def step(self) -> int:
+        return int(self.state["step"])
+
+    # ------------------------------------------------------------------
+    def train(self, data: Iterator[Dict]) -> Dict[str, Any]:
+        """Run to cfg.steps with retry-on-failure + checkpoint/restore."""
+        cfg = self.cfg
+        data_it = iter(data)
+
+        def restore_state(exc, attempt):
+            # recovery: reload the last committed checkpoint (or re-init)
+            self.state = self._init_or_resume(self._rng)
+
+        while self.step < cfg.steps:
+            step_now = self.step
+
+            def one_step():
+                batch = next(data_it)
+                if self.injector is not None:
+                    self.injector.check(step_now)
+                t0 = time.perf_counter()
+                self.state, metrics = self.step_fn(
+                    self.state, jax.tree.map(jnp.asarray, batch))
+                metrics = {k: float(v) for k, v in metrics.items()}
+                dt = time.perf_counter() - t0
+                self.straggler.observe(step_now, dt)
+                metrics.update(step=step_now + 1, sec=dt)
+                self.history.append(metrics)
+                if cfg.log_every and (step_now + 1) % cfg.log_every == 0:
+                    log.info("step %d loss %.4f (%.3fs)", step_now + 1,
+                             metrics["loss"], dt)
+
+            run_with_retries(one_step, max_retries=cfg.max_retries,
+                             on_failure=restore_state)
+            if (cfg.ckpt_dir and cfg.ckpt_every
+                    and self.step % cfg.ckpt_every == 0):
+                ckpt.save(cfg.ckpt_dir, self.step, self.state,
+                          keep=cfg.ckpt_keep)
+        if cfg.ckpt_dir:
+            ckpt.save(cfg.ckpt_dir, self.step, self.state, keep=cfg.ckpt_keep)
+        return {"final_step": self.step, "history": self.history,
+                "straggler_events": self.straggler.events}

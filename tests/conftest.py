@@ -1,0 +1,13 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see ONE
+device; multi-device paths are exercised via subprocess (test_dist.py)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

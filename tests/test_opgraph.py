@@ -1,0 +1,146 @@
+"""Dispatch-graph tests: Table 10 taxonomy, Table 5 fusion deltas, and the
+central controlled-experiment invariant — every fusion level and engine
+produces IDENTICAL numerics (same math, different dispatch granularity)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (LEVELS, DispatchEngine, FullGraphEngine,
+                        build_decode_graph, build_prefill_graph,
+                        run_graph_pure)
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("qwen2-1.5b", layers=4)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _decode_inputs(cfg, model, params, b=2, max_len=32, pos=5):
+    rng = jax.random.PRNGKey(3)
+    cache = model.init_cache(b, max_len)
+    inp = {"tokens": jax.random.randint(rng, (b, 1), 0, cfg.vocab_size,
+                                        jnp.int32),
+           "pos": jnp.int32(pos)}
+    for i in range(cfg.num_layers):
+        inp[f"k_cache_{i}"] = cache["k"][i]
+        inp[f"v_cache_{i}"] = cache["v"][i]
+    return inp
+
+
+def test_fusion_levels_reduce_dispatches_monotonically(dense_setup):
+    cfg, model, params = dense_setup
+    counts = []
+    for lvl in ("F0", "F1", "F2", "F3", "F4"):
+        g = build_decode_graph(params, cfg, batch=1, max_len=16,
+                               fusion=LEVELS[lvl])
+        counts.append(g.num_dispatches())
+    assert counts == sorted(counts, reverse=True)
+    assert counts[0] > counts[-1]
+
+
+def test_fusion_savings_match_paper_structure(dense_setup):
+    """RMSNorm fusion saves 5·(2L+1); MLP saves 3·L; K+V saves 3·L (biased)."""
+    cfg, model, params = dense_setup
+    L = cfg.num_layers
+    n = {lvl: build_decode_graph(params, cfg, batch=1, max_len=16,
+                                 fusion=LEVELS[lvl]).num_dispatches()
+         for lvl in ("F0", "F1", "F2", "F3")}
+    assert n["F0"] - n["F1"] == 5 * (2 * L + 1)
+    assert n["F1"] - n["F2"] == 3 * L
+    # K+V fusion: k_mm + k_bias + v_mm + v_bias → 1 fused (qkv_bias=True)
+    assert n["F2"] - n["F3"] == 3 * L
+
+
+def test_taxonomy_accounts_for_all_compute_ops(dense_setup):
+    cfg, model, params = dense_setup
+    g = build_decode_graph(params, cfg, batch=1, max_len=16)
+    tx = g.taxonomy()
+    assert sum(tx.values()) == g.num_dispatches()
+    # the Table 10 categories all present for a dense decoder
+    for cat in ("linear", "multiply", "add", "sdpa", "silu",
+                "rmsnorm_comp", "concat"):
+        assert tx[cat] > 0, f"missing {cat}"
+
+
+def test_all_levels_and_engines_numerically_identical(dense_setup):
+    cfg, model, params = dense_setup
+    inp = _decode_inputs(cfg, model, params)
+    ref = None
+    for lvl, fu in LEVELS.items():
+        g = build_decode_graph(params, cfg, batch=2, max_len=32, fusion=fu)
+        out_pure = run_graph_pure(g, dict(inp))
+        out_op, stats = DispatchEngine(g).run(dict(inp), sync="end")
+        out_full, _ = FullGraphEngine(g).run(dict(inp))
+        if ref is None:
+            ref = out_pure["logits"]
+        for out in (out_pure, out_op, out_full):
+            np.testing.assert_allclose(np.asarray(out["logits"], np.float32),
+                                       np.asarray(ref, np.float32),
+                                       atol=1e-4)
+        assert stats.dispatches == g.num_dispatches()
+
+
+def test_graph_matches_model_decode_step(dense_setup):
+    cfg, model, params = dense_setup
+    b, max_len, prompt = 2, 32, 5
+    rng = jax.random.PRNGKey(4)
+    toks = jax.random.randint(rng, (b, prompt), 0, cfg.vocab_size, jnp.int32)
+    cache, lg = model.prefill(params, {"tokens": toks}, max_len)
+    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+    _, lg2 = model.decode_step(params, cache, nxt)
+
+    gp = build_prefill_graph(params, cfg, batch=b, prompt_len=prompt,
+                             max_len=max_len)
+    pout = run_graph_pure(gp, {"tokens": toks})
+    gd = build_decode_graph(params, cfg, batch=b, max_len=max_len)
+    dinp = {"tokens": pout["next_token"], "pos": jnp.int32(prompt)}
+    for i in range(cfg.num_layers):
+        kc = jnp.zeros((b, max_len, cfg.num_kv_heads, cfg.resolved_head_dim),
+                       jnp.dtype(cfg.dtype))
+        dinp[f"k_cache_{i}"] = jax.lax.dynamic_update_slice(
+            kc, pout[f"k_prefix_{i}"], (0, 0, 0, 0))
+        dinp[f"v_cache_{i}"] = jax.lax.dynamic_update_slice(
+            jnp.zeros_like(kc), pout[f"v_prefix_{i}"], (0, 0, 0, 0))
+    dout = run_graph_pure(gd, dinp)
+    np.testing.assert_allclose(np.asarray(dout["logits"][:, 0]),
+                               np.asarray(lg2[:, 0]), atol=2e-4)
+
+
+def test_moe_graph_fusion_identical():
+    cfg = get_smoke_config("granite-moe-1b-a400m", layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    inp = _decode_inputs(cfg, model, params, b=2, max_len=16, pos=0)
+    g0 = build_decode_graph(params, cfg, batch=2, max_len=16,
+                            fusion=LEVELS["F0"])
+    g3 = build_decode_graph(params, cfg, batch=2, max_len=16,
+                            fusion=LEVELS["F3"])
+    o0 = run_graph_pure(g0, dict(inp))
+    o3 = run_graph_pure(g3, dict(inp))
+    np.testing.assert_allclose(np.asarray(o0["logits"]),
+                               np.asarray(o3["logits"]), atol=1e-4)
+    assert g3.num_dispatches() < g0.num_dispatches()
+
+
+def test_shape_ops_cost_no_dispatch(dense_setup):
+    cfg, model, params = dense_setup
+    g = build_decode_graph(params, cfg, batch=1, max_len=16)
+    assert g.num_shape_ops() > 0
+    s = g.summary()
+    assert s["compute_ops"] + s["shape_ops"] + s["inputs"] <= s["total_nodes"] + 1
+
+
+def test_qk_norm_arch_builds_graph():
+    cfg = get_smoke_config("qwen3-14b", layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    inp = _decode_inputs(cfg, model, params, b=1, max_len=8, pos=0)
+    g = build_decode_graph(params, cfg, batch=1, max_len=8)
+    out = run_graph_pure(g, inp)
+    assert not bool(jnp.isnan(out["logits"]).any())

@@ -1,0 +1,74 @@
+"""Serving engine: mode-identical generation, benchmark protocol, readback
+variants (App. H), sampler behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serving.engine import GenerationEngine
+from repro.serving.sampler import SamplerConfig, sample
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen2-1.5b", layers=3)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompt = np.array([[5, 9, 2, 14]], np.int32)
+    return model, params, prompt
+
+
+@pytest.mark.parametrize("mode", ["F0", "F3", "F4", "FULL", "model",
+                                  "ondevice"])
+def test_modes_generate_identical_tokens(setup, mode):
+    model, params, prompt = setup
+    ref = GenerationEngine(model, params, mode="model", batch=1,
+                           max_len=32).generate(prompt, 8)
+    eng = GenerationEngine(model, params, mode=mode, batch=1, max_len=32)
+    out = eng.generate(prompt, 8)
+    np.testing.assert_array_equal(out.tokens, ref.tokens)
+    assert out.ttft_s > 0 and out.total_s >= out.ttft_s
+
+
+def test_dispatch_counts_ordered(setup):
+    model, params, prompt = setup
+    d = {m: GenerationEngine(model, params, mode=m, batch=1,
+                             max_len=32).dispatches_per_token
+         for m in ("F0", "F3", "FULL")}
+    assert d["F0"] > d["F3"] > d["FULL"]
+
+
+def test_logits_readback_mode_same_tokens(setup):
+    model, params, prompt = setup
+    t1 = GenerationEngine(model, params, mode="F3", batch=1, max_len=32,
+                          readback="token").generate(prompt, 6).tokens
+    t2 = GenerationEngine(model, params, mode="F3", batch=1, max_len=32,
+                          readback="logits").generate(prompt, 6).tokens
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_benchmark_protocol(setup):
+    model, params, prompt = setup
+    eng = GenerationEngine(model, params, mode="model", batch=1, max_len=32)
+    rep = eng.benchmark(prompt, 6, n_runs=3, warmup=1)
+    assert rep.tok_per_s.n == 3
+    assert rep.tok_per_s.mean > 0
+    row = rep.row()
+    assert {"mode", "tok_s", "ci95", "cv_pct", "ttft_ms"} <= set(row)
+
+
+def test_sampler_greedy_vs_topk():
+    logits = jnp.array([[0.1, 3.0, 0.2, -1.0]])
+    assert int(sample(logits, SamplerConfig("greedy"))[0]) == 1
+    rng = jax.random.PRNGKey(0)
+    tok = sample(logits, SamplerConfig("topk", temperature=0.5, top_k=1), rng)
+    assert int(tok[0]) == 1  # top-1 == greedy
+
+
+def test_sampler_temperature_zero_limit():
+    logits = jnp.array([[0.0, 10.0, 0.0]])
+    rng = jax.random.PRNGKey(1)
+    tok = sample(logits, SamplerConfig("temperature", temperature=1e-6), rng)
+    assert int(tok[0]) == 1

@@ -1,0 +1,59 @@
+"""Statistics module: special functions vs known values + properties."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.stats import betainc, summarize, t_cdf, t_ppf, welch_t
+
+
+def test_betainc_known_values():
+    # I_x(1,1) = x (uniform)
+    for x in (0.1, 0.5, 0.9):
+        assert abs(betainc(1, 1, x) - x) < 1e-10
+    # symmetric: I_0.5(a,a) = 0.5
+    for a in (0.5, 2.0, 7.0):
+        assert abs(betainc(a, a, 0.5) - 0.5) < 1e-9
+
+
+def test_t_cdf_known_values():
+    # t(∞-ish) ≈ normal: Φ(1.96) ≈ 0.975
+    assert abs(t_cdf(1.96, 1e6) - 0.975) < 1e-3
+    # symmetric around 0
+    assert abs(t_cdf(0.0, 5) - 0.5) < 1e-12
+    # classic table: t_0.975(10) = 2.228
+    assert abs(t_ppf(0.975, 10) - 2.228) < 2e-3
+    # t_0.975(1) = 12.706 (Cauchy tail)
+    assert abs(t_ppf(0.975, 1) - 12.706) < 2e-2
+
+
+@given(st.lists(st.floats(-1e3, 1e3), min_size=3, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_summary_ci_contains_mean(xs):
+    s = summarize(xs)
+    assert s.ci95[0] <= s.mean <= s.ci95[1]
+    assert s.std >= 0
+
+
+def test_welch_identical_samples_p_high():
+    a = [1.0, 1.1, 0.9, 1.05, 0.95] * 4
+    t, dof, p = welch_t(a, a)
+    assert p > 0.99
+
+
+def test_welch_separated_samples_p_low():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0, 1, 30)
+    b = rng.normal(5, 1, 30)
+    t, dof, p = welch_t(a, b)
+    assert p < 1e-6 and t < 0
+
+
+@given(st.floats(-30, 30), st.floats(1, 200))
+@settings(max_examples=60, deadline=None)
+def test_t_cdf_monotone_and_bounded(t, dof):
+    p = t_cdf(t, dof)
+    assert 0.0 <= p <= 1.0
+    assert t_cdf(t + 1.0, dof) >= p - 1e-12

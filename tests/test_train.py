@@ -1,0 +1,201 @@
+"""Training substrate: optimizer behavior, data determinism, checkpoint
+atomicity/GC/resume, failure injection, straggler detection."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, MemmapLM, Prefetcher, SyntheticLM, make_dataset
+from repro.train.fault_tolerance import (FailureInjector, InjectedFailure,
+                                         StragglerMonitor, run_with_retries)
+from repro.train.optimizer import AdamWConfig, adamw, cosine_schedule, global_norm
+from repro.train.trainer import Trainer, TrainConfig
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    opt = adamw(AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            total_steps=200))
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lr = cosine_schedule(cfg)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert abs(float(lr(jnp.int32(100))) - 0.1) < 1e-6
+    vals = [float(lr(jnp.int32(s))) for s in range(10, 101, 10)]
+    assert vals == sorted(vals, reverse=True)
+
+
+def test_grad_clipping_bounds_update():
+    opt = adamw(AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=1,
+                            total_steps=10))
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    huge = {"w": jnp.full(3, 1e9)}
+    _, _, metrics = opt.update(huge, state, params)
+    assert float(metrics["grad_norm"]) > 1e8  # reported pre-clip
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_synthetic_data_deterministic():
+    cfg = DataConfig(batch=2, seq_len=8, vocab_size=100, seed=1)
+    a = SyntheticLM(cfg).batch_at(5)
+    b = SyntheticLM(cfg).batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(cfg).batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_synthetic_shards_differ():
+    a = SyntheticLM(DataConfig(2, 8, 100, shard=0, num_shards=2)).batch_at(0)
+    b = SyntheticLM(DataConfig(2, 8, 100, shard=1, num_shards=2)).batch_at(0)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    d = SyntheticLM(DataConfig(1, 16, 50)).batch_at(0)
+    # tokens/labels come from one (seq_len+1) stream
+    assert d["tokens"].shape == d["labels"].shape
+    np.testing.assert_array_equal(d["tokens"][:, 1:], d["labels"][:, :-1])
+
+
+def test_memmap_dataset(tmp_path):
+    path = tmp_path / "toks.bin"
+    data = np.arange(1000, dtype=np.uint16) % 97
+    data.tofile(path)
+    cfg = DataConfig(batch=2, seq_len=10, vocab_size=97, path=str(path))
+    ds = MemmapLM(cfg)
+    b0 = ds.batch_at(0)
+    np.testing.assert_array_equal(b0["tokens"][0], data[:10])
+    np.testing.assert_array_equal(b0["labels"][0], data[1:11])
+
+
+def test_prefetcher_propagates_errors():
+    def gen():
+        yield 1
+        raise ValueError("boom")
+
+    it = Prefetcher(gen(), depth=1)
+    assert next(it) == 1
+    with pytest.raises(ValueError):
+        next(it)
+        next(it)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree(x=1.0):
+    return {"a": jnp.full((3, 2), x), "b": [jnp.arange(4), {"c": jnp.float32(x)}]}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, _tree(2.5))
+    step, tree = ckpt.restore(d)
+    assert step == 7
+    np.testing.assert_allclose(tree["a"], 2.5)
+    np.testing.assert_allclose(tree["b"][1]["c"], 2.5)
+
+
+def test_checkpoint_keep_n_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, _tree(s), keep=2)
+    assert ckpt.all_steps(d) == [4, 5]
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, _tree())
+    # simulate a crash mid-save: directory without the commit marker
+    os.makedirs(os.path.join(d, "step_00000009"))
+    assert ckpt.latest_step(d) == 3
+    assert not ckpt.verify(d, 9)
+
+
+def test_checkpoint_restore_like_casts(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"w": jnp.ones((4,), jnp.float32)})
+    like = {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)}
+    _, tree = ckpt.restore(d, like=like)
+    assert tree["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_run_with_retries_recovers():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise InjectedFailure("x")
+
+    run_with_retries(flaky, max_retries=5)
+    assert calls["n"] == 3
+
+
+def test_run_with_retries_exhausts():
+    def always():
+        raise InjectedFailure("x")
+
+    with pytest.raises(InjectedFailure):
+        run_with_retries(always, max_retries=2)
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(window=20, threshold=3.0)
+    for i in range(15):
+        assert not mon.observe(i, 0.1)
+    assert mon.observe(15, 1.0)
+    assert len(mon.events) == 1
+
+
+def test_trainer_loss_decreases_and_survives_failure(tmp_path):
+    cfg = get_smoke_config("qwen2-1.5b", layers=2)
+    model = build_model(cfg)
+    tc = TrainConfig(steps=10, log_every=0, ckpt_every=4,
+                     ckpt_dir=str(tmp_path / "ck"),
+                     optimizer=AdamWConfig(lr=1e-3, warmup_steps=2,
+                                           total_steps=10))
+    inj = FailureInjector(fail_steps={6})
+    tr = Trainer(model, tc, injector=inj)
+    data = make_dataset(DataConfig(batch=4, seq_len=16,
+                                   vocab_size=cfg.vocab_size), prefetch=0)
+    out = tr.train(data)
+    losses = [h["loss"] for h in out["history"]]
+    assert out["final_step"] == 10
+    assert losses[-1] < losses[0]
+    # auto-resume picks up the final checkpoint
+    tr2 = Trainer(model, tc)
+    assert tr2.step == 10
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6
