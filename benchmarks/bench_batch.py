@@ -18,7 +18,7 @@ import numpy as np
 from benchmarks.common import print_table, save_results
 from repro.configs.bench import BENCH_05B
 from repro.models import build_model
-from repro.serving.engine import GenerationEngine
+from repro.serving import InferenceSession, create_backend
 
 BATCHES = (1, 2, 4, 8)
 
@@ -35,9 +35,9 @@ def run(quick: bool = False, tokens: int = 20) -> List[Dict]:
     base_step_s = None
     for b in BATCHES:
         prompt = rng.integers(0, BENCH_05B.vocab_size, size=(b, 5)).astype(np.int32)
-        eng = GenerationEngine(model, params, mode="F3", batch=b,
-                               max_len=5 + tokens + 4)
-        rep = eng.benchmark(prompt, tokens, n_runs=n_runs, warmup=warmup)
+        session = InferenceSession(create_backend(
+            "F3", model, params, batch=b, max_len=5 + tokens + 4))
+        rep = session.benchmark(prompt, tokens, n_runs=n_runs, warmup=warmup)
         step_s = 1.0 / rep.tok_per_s.mean          # seconds per decode step
         if base_step_s is None:
             base_step_s = step_s

@@ -17,7 +17,7 @@ import numpy as np
 from benchmarks.common import print_table, save_results
 from repro.configs.bench import BENCH_05B, BENCH_15B
 from repro.models import build_model
-from repro.serving.engine import GenerationEngine
+from repro.serving import InferenceSession, create_backend
 
 MODES = ["F0", "F3", "F4", "FULL", "model", "ondevice"]
 
@@ -34,9 +34,10 @@ def run(quick: bool = False, tokens: int = 30, n_runs: int = 10,
         max_len = prompt.shape[1] + tokens + 4
         base = None
         for mode in MODES:
-            eng = GenerationEngine(model, params, mode=mode, batch=1,
-                                   max_len=max_len)
-            rep = eng.benchmark(prompt, tokens, n_runs=n_runs, warmup=warmup)
+            session = InferenceSession(create_backend(
+                mode, model, params, batch=1, max_len=max_len))
+            rep = session.benchmark(prompt, tokens, n_runs=n_runs,
+                                    warmup=warmup)
             if base is None:
                 base = rep.tok_per_s.mean
             rows.append({
@@ -49,9 +50,10 @@ def run(quick: bool = False, tokens: int = 30, n_runs: int = 10,
                 "vs_F0": round(rep.tok_per_s.mean / base, 2),
             })
         # App. H: full-logits readback (the paper's device-argmax ablation)
-        eng = GenerationEngine(model, params, mode="F3", batch=1,
-                               max_len=max_len, readback="logits")
-        rep = eng.benchmark(prompt, tokens, n_runs=n_runs, warmup=warmup)
+        session = InferenceSession(create_backend(
+            "F3", model, params, batch=1, max_len=max_len))
+        rep = session.benchmark(prompt, tokens, n_runs=n_runs, warmup=warmup,
+                                readback="logits")
         rows.append({
             "model": cfg.name, "mode": "F3+logits-readback",
             "disp_per_tok": rep.dispatches_per_token,

@@ -16,7 +16,7 @@ from benchmarks.common import print_table, save_results
 from repro.configs.bench import BENCH_05B
 from repro.core.stats import welch_t
 from repro.models import build_model
-from repro.serving.engine import GenerationEngine
+from repro.serving import InferenceSession, create_backend
 
 LEVEL_LABELS = {
     "F0": "no fusion (baseline)",
@@ -40,9 +40,9 @@ def run(quick: bool = False, cfg=BENCH_05B, tokens: int = 30,
     reports = {}
     prev = None
     for lvl in ("F0", "F1", "F2", "F3", "F4"):
-        eng = GenerationEngine(model, params, mode=lvl, batch=1,
-                               max_len=max_len)
-        rep = eng.benchmark(prompt, tokens, n_runs=n_runs, warmup=warmup)
+        session = InferenceSession(create_backend(
+            lvl, model, params, batch=1, max_len=max_len))
+        rep = session.benchmark(prompt, tokens, n_runs=n_runs, warmup=warmup)
         reports[lvl] = rep
         p = "-"
         if prev is not None:

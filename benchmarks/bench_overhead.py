@@ -17,7 +17,7 @@ from repro.configs.bench import BENCH_05B
 from repro.core.dispatch import measure_dispatch_cost
 from repro.core.overhead import OverheadAccounting
 from repro.models import build_model
-from repro.serving.engine import GenerationEngine
+from repro.serving import InferenceSession, create_backend
 
 
 def run(quick: bool = False, tokens: int = 30) -> Dict:
@@ -31,10 +31,10 @@ def run(quick: bool = False, tokens: int = 30) -> Dict:
 
     reps = {}
     for lvl in ("F0", "F3"):
-        eng = GenerationEngine(model, params, mode=lvl, batch=1,
-                               max_len=max_len)
-        reps[lvl] = eng.benchmark(prompt, tokens, n_runs=n_runs,
-                                  warmup=warmup)
+        session = InferenceSession(create_backend(
+            lvl, model, params, batch=1, max_len=max_len))
+        reps[lvl] = session.benchmark(prompt, tokens, n_runs=n_runs,
+                                      warmup=warmup)
     dc = measure_dispatch_cost(n_dispatches=50, n_runs=n_runs)
 
     acc = OverheadAccounting(

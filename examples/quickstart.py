@@ -1,6 +1,7 @@
 """Quickstart: build a model from the registry, run a forward pass, and
-generate tokens through three execution backends — op-by-op dispatch (the
-paper's torch-webgpu regime), fused dispatch, and whole-graph capture.
+generate tokens through the ``ExecutionBackend`` registry — op-by-op
+dispatch (the paper's torch-webgpu regime), fused dispatch, and
+whole-graph capture — then stream tokens through an ``InferenceSession``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,7 +11,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
-from repro.serving.engine import GenerationEngine
+from repro.serving import InferenceSession, ServeRequest, create_backend
 
 
 def main() -> None:
@@ -27,11 +28,22 @@ def main() -> None:
 
     prompt = np.array([[11, 23, 37, 41, 53]], np.int32)
     for mode in ("F0", "F3", "FULL"):
-        eng = GenerationEngine(model, params, mode=mode, batch=1, max_len=32)
-        r = eng.generate(prompt, 10)
-        r = eng.generate(prompt, 10)  # warm
-        print(f"mode {mode:5s}: {r.dispatches_per_token:4d} dispatches/token "
-              f"→ {r.tok_per_s:8.1f} tok/s; tokens={r.tokens[0, :6]}")
+        backend = create_backend(mode, model, params, batch=1, max_len=32)
+        session = InferenceSession(backend)
+        r = session.run(ServeRequest(prompt=prompt, max_new_tokens=10))
+        r = session.run(ServeRequest(prompt=prompt, max_new_tokens=10))  # warm
+        stats = backend.dispatch_stats().row()
+        print(f"mode {mode:5s}: {backend.capabilities.dispatches_per_token:4d} "
+              f"dispatches/token → {r.tok_per_s:8.1f} tok/s; "
+              f"tokens={r.tokens[0, :6]}; stats={stats}")
+
+    # streaming: the callback fires per token, in order, before the next step
+    backend = create_backend("model", model, params, batch=1, max_len=32)
+    session = InferenceSession(backend)
+    streamed = []
+    session.run(ServeRequest(prompt=prompt, max_new_tokens=8,
+                             stream=lambda i, t: streamed.append(int(t[0]))))
+    print(f"streamed tokens: {streamed}")
 
 
 if __name__ == "__main__":

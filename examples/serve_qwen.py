@@ -1,8 +1,10 @@
-"""Batched-request serving demo on the paper's benchmark protocol: the
-Qwen2.5-0.5B-structured bench model serving a batch of prompts at every
-fusion level, reporting tok/s ± CI95 and TTFT like Table 2.
+"""Multi-request serving demo on the paper's benchmark protocol: the
+Qwen2.5-0.5B-structured bench model first benchmarked per backend
+(tok/s ± CI95 and TTFT like Table 2), then serving a QUEUE of requests
+through the slot ``Scheduler`` — each slot holds its own KV cache and
+decode steps interleave round-robin.
 
-    PYTHONPATH=src python examples/serve_qwen.py --batch 4 --tokens 25
+    PYTHONPATH=src python examples/serve_qwen.py --requests 4 --tokens 25
 """
 import argparse
 
@@ -11,12 +13,15 @@ import numpy as np
 
 from repro.configs.bench import BENCH_05B
 from repro.models import build_model
-from repro.serving.engine import GenerationEngine
+from repro.serving import (InferenceSession, Scheduler, ServeRequest,
+                           create_backend)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4,
+                    help="queued requests for the scheduler demo")
+    ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--tokens", type=int, default=25)
     ap.add_argument("--runs", type=int, default=5)
     args = ap.parse_args()
@@ -24,22 +29,37 @@ def main() -> None:
     model = build_model(BENCH_05B)
     params = model.init_params(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, BENCH_05B.vocab_size,
-                           size=(args.batch, 5)).astype(np.int32)
     max_len = 5 + args.tokens + 4
 
-    print(f"serving {args.batch} requests × {args.tokens} tokens "
+    print(f"benchmark: 1 request × {args.tokens} tokens "
           f"({BENCH_05B.name}: 24 layers, Qwen2.5-0.5B structure)\n")
+    prompt = rng.integers(0, BENCH_05B.vocab_size, size=(1, 5)).astype(np.int32)
     for mode in ("F0", "F3", "FULL", "ondevice"):
-        eng = GenerationEngine(model, params, mode=mode, batch=args.batch,
-                               max_len=max_len)
-        rep = eng.benchmark(prompts, args.tokens, n_runs=args.runs, warmup=2)
-        seq_tok_s = rep.tok_per_s.mean * args.batch
+        backend = create_backend(mode, model, params, batch=1,
+                                 max_len=max_len)
+        session = InferenceSession(backend)
+        rep = session.benchmark(prompt, args.tokens, n_runs=args.runs,
+                                warmup=2)
         print(f"{mode:9s} disp/tok={rep.dispatches_per_token:4d} "
-              f"{rep.tok_per_s.mean:7.1f} steps/s "
-              f"({seq_tok_s:8.1f} tok/s aggregate) "
+              f"{rep.tok_per_s.mean:7.1f} tok/s "
               f"CI95=[{rep.tok_per_s.ci95[0]:.1f},{rep.tok_per_s.ci95[1]:.1f}] "
-              f"TTFT={rep.ttft_ms.mean:.1f}ms")
+              f"TTFT={rep.ttft_ms.mean:.1f}ms "
+              f"phases={rep.dispatch_stats}")
+
+    print(f"\nscheduler: {args.requests} queued requests on {args.slots} "
+          f"slots (backend=F3, token-level round-robin)\n")
+    backend = create_backend("F3", model, params, batch=1, max_len=max_len)
+    sched = Scheduler(InferenceSession(backend), num_slots=args.slots)
+    for r in range(args.requests):
+        p = rng.integers(0, BENCH_05B.vocab_size, size=(1, 5)).astype(np.int32)
+        sched.submit(ServeRequest(prompt=p, max_new_tokens=args.tokens,
+                                  request_id=f"user-{r}"))
+    results = sched.run()
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"{rid}: {r.n_new} tokens in {r.total_s:.2f}s "
+              f"(ttft {1e3 * r.ttft_s:.1f}ms, {r.finish_reason}) "
+              f"first={r.tokens[0, :5]}")
 
 
 if __name__ == "__main__":

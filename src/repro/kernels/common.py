@@ -11,6 +11,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed pltpu.TPUCompilerParams → pltpu.CompilerParams; resolve
+# whichever this jax provides so kernels work on both sides of the rename.
+TPUCompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
 @functools.lru_cache(None)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import TPUCompilerParams
+
 
 def _fused_mlp_kernel(x_ref, wg_ref, wu_ref, o_ref, acc_g, acc_u, *, n_k: int):
     k = pl.program_id(2)
@@ -54,7 +56,7 @@ def fused_mlp_pallas(x: jax.Array, wg: jax.Array, wu: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((m, f), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_f), jnp.float32),
                         pltpu.VMEM((block_m, block_f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, wg, wu)

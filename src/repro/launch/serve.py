@@ -1,7 +1,12 @@
-"""Serving launcher — the paper's benchmark protocol as a CLI.
+"""Serving launcher — the paper's benchmark protocol as a CLI, on the
+``ExecutionBackend`` registry + ``InferenceSession`` API.
 
     PYTHONPATH=src python -m repro.launch.serve --model bench-0.5b \
         --modes F0,F3,FULL,model,ondevice --tokens 50 --runs 10
+
+Every mode routes through the same backend protocol, so each row carries
+the uniform dispatch accounting (dispatches/step + the Table-20-style
+arg-prep / enqueue / sync phase split).
 """
 from __future__ import annotations
 
@@ -23,13 +28,18 @@ def main() -> None:
     ap.add_argument("--runs", type=int, default=10)
     ap.add_argument("--warmup", type=int, default=3)
     ap.add_argument("--readback", default="token", choices=["token", "logits"])
+    ap.add_argument("--sampler", default="greedy",
+                    choices=["greedy", "temperature", "topk"])
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=40)
     ap.add_argument("--out", default=None, help="write JSON rows here")
     args = ap.parse_args()
 
     from repro.configs import REGISTRY, get_smoke_config
     from repro.configs.bench import BENCH_MODELS
     from repro.models import build_model
-    from repro.serving.engine import GenerationEngine
+    from repro.serving import (InferenceSession, SamplerConfig,
+                               available_backends, create_backend)
 
     if args.model in BENCH_MODELS:
         cfg = BENCH_MODELS[args.model]
@@ -44,13 +54,20 @@ def main() -> None:
     prompt = rng.integers(0, cfg.vocab_size,
                           size=(1, args.prompt_len)).astype(np.int32)
     max_len = args.prompt_len + args.tokens + 8
+    sampler = SamplerConfig(args.sampler, temperature=args.temperature,
+                            top_k=args.top_k)
 
     rows = []
     for mode in args.modes.split(","):
-        eng = GenerationEngine(model, params, mode=mode, batch=1,
-                               max_len=max_len, readback=args.readback)
-        rep = eng.benchmark(prompt, args.tokens, n_runs=args.runs,
-                            warmup=args.warmup)
+        if mode not in available_backends():
+            raise SystemExit(f"unknown backend {mode!r}; "
+                             f"available: {available_backends()}")
+        backend = create_backend(mode, model, params, batch=1,
+                                 max_len=max_len)
+        session = InferenceSession(backend)
+        rep = session.benchmark(prompt, args.tokens, n_runs=args.runs,
+                                warmup=args.warmup, sampler=sampler,
+                                readback=args.readback)
         row = rep.row()
         print(f"[serve] {row}")
         rows.append(row)

@@ -1,4 +1,18 @@
-"""Batch-1 autoregressive serving — the paper's benchmark regime."""
+"""Serving layer: the ``ExecutionBackend`` protocol, the production
+session API, and the back-compat ``GenerationEngine`` shim."""
+from repro.serving.backends import (BackendCapabilities, DispatchStats,
+                                    ExecutionBackend, StepOutput,
+                                    available_backends, create_backend,
+                                    register_backend)
 from repro.serving.engine import GenerationEngine, GenerationResult
+from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.session import (BenchmarkReport, InferenceSession,
+                                   Scheduler, ServeRequest, ServeResult)
 
-__all__ = ["GenerationEngine", "GenerationResult"]
+__all__ = [
+    "BackendCapabilities", "DispatchStats", "ExecutionBackend", "StepOutput",
+    "available_backends", "create_backend", "register_backend",
+    "GenerationEngine", "GenerationResult", "SamplerConfig", "sample",
+    "BenchmarkReport", "InferenceSession", "Scheduler", "ServeRequest",
+    "ServeResult",
+]

@@ -1,0 +1,177 @@
+"""The ``ExecutionBackend`` protocol — ONE execution surface for every
+dispatch regime the reproduction measures.
+
+The paper's central result (per-operation overhead, not kernel quality,
+dominates batch-1 inference) is reproduced by running the SAME model at
+different dispatch granularities.  Each granularity is a backend:
+
+* ``F0``…``F4``  — op-by-op dispatch at a fusion level (Table 5)
+* ``FULL``       — whole-graph capture, one executable per token (§9.2)
+* ``model``      — production path: jitted scan-based prefill/decode
+* ``ondevice``   — the entire generation loop inside one dispatch
+
+Backends share a two-phase contract — ``prefill(tokens) → (state, out)``
+then ``decode_step(state, tok) → (state, out)`` — and a uniform
+instrumentation surface: ``capabilities`` (static facts: dispatches per
+token, device-side argmax, on-device loop) and ``dispatch_stats()`` (the
+Table-20-style arg-prep / enqueue / sync phase decomposition accumulated
+across every run).  The serving session layer programs ONLY against this
+protocol; new scenarios (batching, streaming, new fusion levels) plug in
+via ``@register_backend`` without touching the session code.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+
+from repro.core.engine import RunStats
+
+State = Dict[str, Any]
+
+
+class StepOutput(NamedTuple):
+    """One prefill/decode step's device-side outputs (nothing read back).
+
+    ``logits``      — (B, 1, V) last-position logits, still on device.
+    ``next_token``  — (B, 1) int32 device-side argmax when the backend
+                      computes it in-graph (the paper's "token readback"
+                      regime, App. H); ``None`` when only logits exist.
+    """
+    logits: jax.Array
+    next_token: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """Static facts the session layer keys decisions on."""
+    name: str                       # registry key
+    dispatches_per_token: int       # 0 ⇒ amortized (whole loop is 1 dispatch)
+    device_argmax: bool = True      # StepOutput.next_token is populated
+    on_device_loop: bool = False    # generate_ondevice() is available
+    phase_timeline: bool = False    # dispatch_stats() has real phase splits
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    """Uniform cross-backend dispatch accounting (Table 20 analogue).
+
+    Accumulated over every ``prefill``/``decode_step`` run since the last
+    ``reset``; phase totals are zero for backends whose engine does not
+    record a host-side timeline (single-executable paths).
+    """
+    steps: int = 0                  # prefill + decode invocations
+    dispatches: int = 0
+    shape_ops: int = 0
+    arg_prep_s: float = 0.0
+    enqueue_s: float = 0.0
+    sync_s: float = 0.0
+    wall_s: float = 0.0
+
+    def add(self, rs: RunStats) -> None:
+        self.steps += 1
+        self.dispatches += rs.dispatches
+        self.shape_ops += rs.shape_ops
+        self.arg_prep_s += rs.arg_prep_s
+        self.enqueue_s += rs.enqueue_s
+        self.sync_s += rs.sync_s
+        self.wall_s += rs.wall_s
+
+    @property
+    def dispatches_per_step(self) -> float:
+        return self.dispatches / max(self.steps, 1)
+
+    def row(self) -> Dict[str, Any]:
+        """One uniform reporting row per backend (serve CLI / benchmarks)."""
+        return {
+            "steps": self.steps,
+            "dispatches": self.dispatches,
+            "disp_per_step": round(self.dispatches_per_step, 1),
+            "arg_prep_ms": round(1e3 * self.arg_prep_s, 3),
+            "enqueue_ms": round(1e3 * self.enqueue_s, 3),
+            "sync_ms": round(1e3 * self.sync_s, 3),
+        }
+
+
+class ExecutionBackend(abc.ABC):
+    """Uniform execution strategy: prefill once, then step token-by-token.
+
+    ``state`` is an opaque per-request dict (KV cache + position).  Every
+    request owns its own state, so one backend instance (compiled
+    executables are shared) serves many concurrent requests — the seam the
+    slot scheduler builds on.
+    """
+
+    capabilities: BackendCapabilities
+
+    @abc.abstractmethod
+    def prefill(self, tokens: jax.Array) -> Tuple[State, StepOutput]:
+        """Process the prompt (B, plen) → fresh request state + first-token
+        logits."""
+
+    @abc.abstractmethod
+    def decode_step(self, state: State, tok: jax.Array
+                    ) -> Tuple[State, StepOutput]:
+        """One autoregressive step.  tok (B, 1) int32 → (state', outputs)."""
+
+    # -- optional fast path ------------------------------------------------
+    def generate_ondevice(self, state: State, first_tok: jax.Array,
+                          n_new: int, sampler, rng) -> jax.Array:
+        """Run the remaining loop in one dispatch → (B, n_new) tokens.
+        Only for backends with ``capabilities.on_device_loop``."""
+        raise NotImplementedError(
+            f"{self.capabilities.name!r} has no on-device generation loop")
+
+    # -- uniform instrumentation ------------------------------------------
+    def __init__(self) -> None:
+        self._stats = DispatchStats()
+
+    def dispatch_stats(self) -> DispatchStats:
+        return self._stats
+
+    def reset_stats(self) -> None:
+        self._stats = DispatchStats()
+
+    def _record(self, rs: RunStats) -> None:
+        self._stats.add(rs)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., ExecutionBackend]] = {}
+
+
+def register_backend(*names: str):
+    """Class decorator: ``@register_backend("F0", …)``.  The factory is
+    called as ``factory(model, params, mode=name, batch=…, max_len=…)``."""
+
+    def deco(factory):
+        taken = [n for n in names if n in _REGISTRY]
+        if taken:  # validate BEFORE mutating: no half-registered factories
+            raise ValueError(f"backend(s) {taken} already registered")
+        for n in names:
+            _REGISTRY[n] = factory
+        return factory
+
+    return deco
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def create_backend(name: str, model, params, *, batch: int = 1,
+                   max_len: int = 128, **kw) -> ExecutionBackend:
+    """Instantiate the backend registered under ``name``."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+    return factory(model, params, mode=name, batch=batch, max_len=max_len,
+                   **kw)

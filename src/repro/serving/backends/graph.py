@@ -1,0 +1,91 @@
+"""Dispatch-graph backends: the paper's measured execution regimes.
+
+``F0``…``F4`` run one jitted executable per op (``DispatchEngine``) at a
+progressive fusion level (Table 5); ``FULL`` captures the whole step into
+ONE executable (``FullGraphEngine``, the §9.2 CUDA-Graphs analogue).
+Numerics are identical across all six — only dispatch granularity changes,
+which is exactly the controlled experiment the protocol exposes through
+``dispatch_stats()``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.engine import DispatchEngine, FullGraphEngine
+from repro.core.graphs import LEVELS, build_decode_graph, build_prefill_graph
+from repro.serving import kvcache as kv
+from repro.serving.backends.base import (BackendCapabilities, ExecutionBackend,
+                                         State, StepOutput, register_backend)
+
+GRAPH_MODES = tuple(LEVELS) + ("FULL",)
+
+
+@register_backend(*GRAPH_MODES)
+class GraphBackend(ExecutionBackend):
+    """Adapter: OpGraph + dispatch engine behind the backend protocol."""
+
+    def __init__(self, model, params, *, mode: str, batch: int = 1,
+                 max_len: int = 128) -> None:
+        super().__init__()
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.mode = mode
+        self.batch = batch
+        self.max_len = max_len
+        self._full = mode == "FULL"
+        self._fusion = LEVELS["F0" if self._full else mode]
+        graph = build_decode_graph(params, self.cfg, batch=batch,
+                                   max_len=max_len, fusion=self._fusion)
+        self._decode_graph = graph
+        self._decode_engine = (FullGraphEngine(graph) if self._full
+                               else DispatchEngine(graph))
+        self._prefill_engines: Dict[int, Any] = {}
+        self.capabilities = BackendCapabilities(
+            name=mode,
+            dispatches_per_token=1 if self._full else graph.num_dispatches(),
+            device_argmax=True,
+            phase_timeline=True,
+        )
+
+    # ------------------------------------------------------------------
+    def _prefill_engine(self, prompt_len: int):
+        eng = self._prefill_engines.get(prompt_len)
+        if eng is None:
+            graph = build_prefill_graph(self.params, self.cfg,
+                                        batch=self.batch,
+                                        prompt_len=prompt_len,
+                                        max_len=self.max_len,
+                                        fusion=self._fusion)
+            eng = (FullGraphEngine(graph) if self._full
+                   else DispatchEngine(graph))
+            self._prefill_engines[prompt_len] = eng
+        return eng
+
+    def prefill(self, tokens) -> Tuple[State, StepOutput]:
+        tokens = jnp.asarray(tokens, jnp.int32)
+        b, plen = tokens.shape
+        assert b == self.batch, f"backend built for batch={self.batch}, got {b}"
+        eng = self._prefill_engine(plen)
+        out, rs = eng.run({"tokens": tokens}, record_timeline=True)
+        self._record(rs)
+        cache = kv.load_prefix(
+            kv.empty_graph_cache(self.cfg, b, self.max_len), out,
+            self.cfg.num_layers)
+        state: State = {"cache": cache, "pos": plen}
+        return state, StepOutput(out["logits"], out["next_token"])
+
+    def decode_step(self, state: State, tok) -> Tuple[State, StepOutput]:
+        inputs = dict(state["cache"])
+        inputs["tokens"] = jnp.asarray(tok, jnp.int32)
+        inputs["pos"] = jnp.int32(state["pos"])
+        out, rs = self._decode_engine.run(inputs, record_timeline=True)
+        self._record(rs)
+        cache = {}
+        for l in range(self.cfg.num_layers):
+            cache[f"k_cache_{l}"] = out[f"k_cache_{l}"]
+            cache[f"v_cache_{l}"] = out[f"v_cache_{l}"]
+        new_state: State = {"cache": cache, "pos": state["pos"] + 1}
+        return new_state, StepOutput(out["logits"], out["next_token"])

@@ -1,0 +1,65 @@
+"""Production model backend: ONE jitted executable per phase.
+
+The whole prefill (scan over layers) and the whole decode step each lower
+to a single XLA dispatch — the regime the paper's §9.2 asks WebGPU
+runtimes to reach.  The device-side argmax is computed inside the same
+executable, so the greedy path reads back one int32 per token (App. H
+"token readback").
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import RunStats
+from repro.serving.backends.base import (BackendCapabilities, ExecutionBackend,
+                                         State, StepOutput, register_backend)
+
+
+@register_backend("model")
+class ModelBackend(ExecutionBackend):
+    """Adapter over ``Model.prefill`` / ``Model.decode_step``."""
+
+    def __init__(self, model, params, *, mode: str = "model", batch: int = 1,
+                 max_len: int = 128) -> None:
+        super().__init__()
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+
+        def _prefill(p, t):
+            cache, logits = model.prefill(p, {"tokens": t}, max_len)
+            return cache, logits, jnp.argmax(logits, -1).astype(jnp.int32)
+
+        def _decode(p, cache, t):
+            cache, logits = model.decode_step(p, cache, t)
+            return cache, logits, jnp.argmax(logits, -1).astype(jnp.int32)
+
+        self._jit_prefill = jax.jit(_prefill)
+        self._jit_decode = jax.jit(_decode)
+        self.capabilities = BackendCapabilities(
+            name=mode, dispatches_per_token=1, device_argmax=True)
+
+    # ------------------------------------------------------------------
+    def _run(self, fn, *args) -> Tuple[object, StepOutput]:
+        t0 = time.perf_counter()
+        cache, logits, nxt = fn(*args)
+        enq = time.perf_counter() - t0  # async call until handle return
+        self._record(RunStats(wall_s=enq, dispatches=1, shape_ops=0,
+                              sync_mode="none", enqueue_s=enq))
+        return cache, StepOutput(logits, nxt)
+
+    def prefill(self, tokens) -> Tuple[State, StepOutput]:
+        tokens = jnp.asarray(tokens, jnp.int32)
+        cache, out = self._run(self._jit_prefill, self.params, tokens)
+        return {"cache": cache}, out
+
+    def decode_step(self, state: State, tok) -> Tuple[State, StepOutput]:
+        cache, out = self._run(self._jit_decode, self.params, state["cache"],
+                               jnp.asarray(tok, jnp.int32))
+        return {"cache": cache}, out

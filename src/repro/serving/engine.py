@@ -1,35 +1,30 @@
-"""Autoregressive generation engine — the paper's end-to-end benchmark
-protocol (§3.3–§3.4) over interchangeable execution backends:
+"""Back-compat generation engine — now a thin shim over the backend
+registry + ``InferenceSession``.
 
-* ``F0``…``F4``   — op-by-op dispatch engine at a fusion level (Table 5)
-* ``FULL``        — whole-graph capture, one executable per token (§9.2 ask)
-* ``model``       — production path: jitted scan-based model prefill/decode
-* ``ondevice``    — beyond-paper: the ENTIRE generation loop inside one
-                    ``lax.scan`` dispatch (eliminates the paper's ~11 ms/token
-                    argmax-readback sync entirely)
+New code should use the first-class API::
 
-Per-token readback mode reproduces App. H: ``token`` reads back one int32
-(device-side argmax); ``logits`` reads back the full vocab row and argmaxes
-on host (the paper's "full readback" baseline).
+    from repro.serving import InferenceSession, ServeRequest, create_backend
+    backend = create_backend("F3", model, params, batch=1, max_len=128)
+    result = InferenceSession(backend).run(ServeRequest(prompt, 32))
+
+``GenerationEngine`` keeps the historical constructor and greedy
+``generate``/``benchmark`` surface for existing callers; every mode
+(``F0``…``F4``, ``FULL``, ``model``, ``ondevice``) routes through the
+``ExecutionBackend`` registry, so dispatch accounting is uniform.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.core.engine import DispatchEngine, FullGraphEngine
-from repro.core.graphs import LEVELS, FusionSpec, build_decode_graph, build_prefill_graph
-from repro.core.stats import Summary, summarize
-from repro.models.factory import Model
-from repro.serving import kvcache as kv
+from repro.serving.backends import GRAPH_MODES, create_backend
+from repro.serving.session import (BenchmarkReport, InferenceSession,
+                                   ServeRequest)
 
-GRAPH_MODES = tuple(LEVELS) + ("FULL",)
+__all__ = ["GenerationEngine", "GenerationResult", "BenchmarkReport",
+           "GRAPH_MODES"]
 
 
 @dataclasses.dataclass
@@ -45,168 +40,37 @@ class GenerationResult:
         return self.n_new / self.total_s
 
 
-@dataclasses.dataclass
-class BenchmarkReport:
-    """mean ± std, CI95, CV over n_runs — the paper's Table 2 row format."""
-    mode: str
-    arch: str
-    tok_per_s: Summary
-    ttft_ms: Summary
-    dispatches_per_token: int
-    all_tps: List[float]
-    all_ttft_ms: List[float]
-
-    def row(self) -> Dict[str, Any]:
-        return {
-            "mode": self.mode, "arch": self.arch,
-            "tok_s": round(self.tok_per_s.mean, 2),
-            "ci95": [round(x, 2) for x in self.tok_per_s.ci95],
-            "cv_pct": round(100 * self.tok_per_s.cv, 1),
-            "ttft_ms": round(self.ttft_ms.mean, 2),
-            "dispatches_per_token": self.dispatches_per_token,
-        }
-
-
 class GenerationEngine:
-    """One (model, params, mode) serving configuration."""
+    """One (model, params, mode) serving configuration (compat shim)."""
 
-    def __init__(self, model: Model, params: Dict[str, Any], *, mode: str,
+    def __init__(self, model, params: Dict[str, Any], *, mode: str,
                  batch: int = 1, max_len: int = 128,
                  readback: str = "token") -> None:
         self.model = model
-        self.cfg: ModelConfig = model.cfg
+        self.cfg = model.cfg
         self.params = params
         self.mode = mode
         self.batch = batch
         self.max_len = max_len
         self.readback = readback
-        self._prefill_graphs: Dict[int, Any] = {}
-        self._decode_engine = None
-        self._jit_prefill = None
-        self._jit_decode = None
-        self._ondevice = None
-
-        if mode in GRAPH_MODES:
-            fusion = LEVELS["F0" if mode == "FULL" else mode]
-            self._fusion = fusion
-            graph = build_decode_graph(params, self.cfg, batch=batch,
-                                       max_len=max_len, fusion=fusion)
-            self._decode_graph = graph
-            self._decode_engine = (FullGraphEngine(graph) if mode == "FULL"
-                                   else DispatchEngine(graph))
-            self.dispatches_per_token = (1 if mode == "FULL"
-                                         else graph.num_dispatches())
-        elif mode == "model":
-            self._jit_prefill = jax.jit(
-                lambda p, t: self.model.prefill(p, {"tokens": t}, self.max_len))
-            self._jit_decode = jax.jit(self.model.decode_step)
-            self.dispatches_per_token = 1
-        elif mode == "ondevice":
-            self._build_ondevice()
-            self.dispatches_per_token = 0  # amortized: 1 dispatch / whole sequence
-        else:
-            raise ValueError(f"unknown mode {mode!r}")
-
-    # ------------------------------------------------------------------
-    def _build_ondevice(self):
-        model = self.model
-
-        def gen(params, cache, first_tok, n_new: int):
-            def body(carry, _):
-                c, tok = carry
-                c, logits = model.decode_step(params, c, tok)
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                return (c, nxt), nxt[:, 0]
-
-            (_, _), toks = jax.lax.scan(body, (cache, first_tok), None,
-                                        length=n_new)
-            return toks.T  # (B, n_new)
-
-        self._ondevice = jax.jit(gen, static_argnums=(3,))
-        self._jit_prefill = jax.jit(
-            lambda p, t: self.model.prefill(p, {"tokens": t}, self.max_len))
-
-    def _prefill_graph(self, prompt_len: int):
-        g = self._prefill_graphs.get(prompt_len)
-        if g is None:
-            graph = build_prefill_graph(self.params, self.cfg,
-                                        batch=self.batch,
-                                        prompt_len=prompt_len,
-                                        max_len=self.max_len,
-                                        fusion=self._fusion)
-            eng = (FullGraphEngine(graph) if self.mode == "FULL"
-                   else DispatchEngine(graph))
-            g = (graph, eng)
-            self._prefill_graphs[prompt_len] = g
-        return g
-
-    def _read_token(self, out: Dict[str, Any]) -> np.ndarray:
-        """The paper's per-token GPU→CPU sync (§5.1, ~11 ms on WebGPU)."""
-        if self.readback == "logits":
-            logits = np.asarray(out["logits"])      # full-row readback
-            return np.argmax(logits, axis=-1).astype(np.int32).reshape(-1, 1)
-        return np.asarray(out["next_token"]).reshape(-1, 1)
+        self.backend = create_backend(mode, model, params, batch=batch,
+                                      max_len=max_len)
+        self.session = InferenceSession(self.backend)
+        self.dispatches_per_token = \
+            self.backend.capabilities.dispatches_per_token
 
     # ------------------------------------------------------------------
     def generate(self, prompt: np.ndarray, n_new: int) -> GenerationResult:
-        prompt = jnp.asarray(prompt, jnp.int32)
-        b, plen = prompt.shape
-        assert b == self.batch
-        toks_out = np.zeros((b, n_new), np.int32)
-
-        t0 = time.perf_counter()
-        if self.mode in GRAPH_MODES:
-            _, peng = self._prefill_graph(plen)
-            pout, _ = peng.run({"tokens": prompt})
-            cache = kv.load_prefix(
-                kv.empty_graph_cache(self.cfg, b, self.max_len), pout,
-                self.cfg.num_layers)
-            tok = self._read_token(pout)
-            ttft = time.perf_counter() - t0
-            toks_out[:, 0] = tok[:, 0]
-            inputs = dict(cache)
-            for i in range(1, n_new):
-                inputs["tokens"] = jnp.asarray(tok)
-                inputs["pos"] = jnp.int32(plen + i - 1)
-                out, _ = self._decode_engine.run(inputs)
-                for l in range(self.cfg.num_layers):
-                    inputs[f"k_cache_{l}"] = out[f"k_cache_{l}"]
-                    inputs[f"v_cache_{l}"] = out[f"v_cache_{l}"]
-                tok = self._read_token(out)
-                toks_out[:, i] = tok[:, 0]
-        elif self.mode == "model":
-            cache, logits = self._jit_prefill(self.params, prompt)
-            tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-            ttft = time.perf_counter() - t0
-            toks_out[:, 0] = tok[:, 0]
-            for i in range(1, n_new):
-                cache, logits = self._jit_decode(self.params, cache,
-                                                 jnp.asarray(tok))
-                tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-                toks_out[:, i] = tok[:, 0]
-        else:  # ondevice
-            cache, logits = self._jit_prefill(self.params, prompt)
-            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            ttft = time.perf_counter() - t0  # first token available on device
-            toks_out[:, 0] = np.asarray(first[:, 0])
-            if n_new > 1:
-                rest = self._ondevice(self.params, cache, first, n_new - 1)
-                toks_out[:, 1:] = np.asarray(rest)
-        total = time.perf_counter() - t0
-        return GenerationResult(toks_out, ttft, total, n_new,
+        prompt = np.atleast_2d(np.asarray(prompt, np.int32))
+        assert prompt.shape[0] == self.batch
+        r = self.session.run(ServeRequest(prompt=prompt, max_new_tokens=n_new,
+                                          readback=self.readback))
+        return GenerationResult(r.tokens, r.ttft_s, r.total_s, r.n_new,
                                 self.dispatches_per_token)
 
     # ------------------------------------------------------------------
     def benchmark(self, prompt: np.ndarray, n_new: int, *, n_runs: int = 10,
                   warmup: int = 3) -> BenchmarkReport:
         """The paper's protocol: warmup to steady state, then timed runs."""
-        for _ in range(warmup):
-            self.generate(prompt, n_new)
-        tps, ttfts = [], []
-        for _ in range(n_runs):
-            r = self.generate(prompt, n_new)
-            tps.append(r.tok_per_s)
-            ttfts.append(1e3 * r.ttft_s)
-        return BenchmarkReport(self.mode, self.cfg.name, summarize(tps),
-                               summarize(ttfts), self.dispatches_per_token,
-                               tps, ttfts)
+        return self.session.benchmark(prompt, n_new, n_runs=n_runs,
+                                      warmup=warmup, readback=self.readback)

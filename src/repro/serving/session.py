@@ -1,0 +1,290 @@
+"""Production serving session over the ``ExecutionBackend`` protocol.
+
+``InferenceSession`` turns any registered backend into a request server:
+
+* pluggable sampling (``SamplerConfig``: greedy / temperature / top-k),
+* streaming token callbacks (called in emission order),
+* stop conditions (stop-token set / max-new-tokens),
+* the paper's App.-H readback variants (``token``: one int32 per step;
+  ``logits``: full vocab row read back, host-side argmax),
+* the single-dispatch on-device loop when the backend supports it and
+  nothing needs to observe tokens mid-generation.
+
+``Scheduler`` queues many requests onto a fixed number of slots and
+interleaves their decode steps round-robin — each slot owns its own
+backend state (per-request KV cache allocated by the backend via
+``kvcache``), which is the seam continuous batching plugs into later.
+
+The step loop is exposed piecewise (``start`` / ``step`` / ``finish``) so
+the scheduler — and future async drivers — can interleave requests; plain
+``run`` composes them for the single-request case.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.stats import Summary, summarize
+from repro.serving.backends.base import ExecutionBackend, StepOutput
+from repro.serving.sampler import SamplerConfig, sample
+
+_req_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One generation request.
+
+    ``prompt`` is (plen,) or (B, plen) int tokens; B must match the
+    backend's compiled batch.  ``stream`` is called as ``stream(i, toks)``
+    with ``toks`` the (B,) int32 tokens emitted at step ``i`` — in order,
+    before the next step runs.  ``readback`` selects the App.-H regime.
+    """
+    prompt: np.ndarray
+    max_new_tokens: int = 32
+    sampler: SamplerConfig = SamplerConfig()
+    stop_tokens: Tuple[int, ...] = ()
+    seed: int = 0
+    request_id: str = ""
+    stream: Optional[Callable[[int, np.ndarray], None]] = None
+    readback: str = "token"          # "token" | "logits"
+
+    def __post_init__(self) -> None:
+        if not self.request_id:
+            self.request_id = f"req-{next(_req_counter)}"
+        if self.readback not in ("token", "logits"):
+            raise ValueError(f"unknown readback {self.readback!r}")
+        if self.sampler.kind not in ("greedy", "temperature", "topk"):
+            raise ValueError(f"unknown sampler kind {self.sampler.kind!r}")
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Completed request: tokens + timing + uniform dispatch accounting."""
+    request_id: str
+    tokens: np.ndarray               # (B, n_new)
+    n_new: int
+    ttft_s: float
+    total_s: float
+    finish_reason: str               # "stop" | "length"
+    backend: str
+    dispatches_per_token: int
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.n_new / max(self.total_s, 1e-12)
+
+
+@dataclasses.dataclass
+class BenchmarkReport:
+    """mean ± std, CI95, CV over n_runs — the paper's Table 2 row format."""
+    mode: str
+    arch: str
+    tok_per_s: Summary
+    ttft_ms: Summary
+    dispatches_per_token: int
+    all_tps: List[float]
+    all_ttft_ms: List[float]
+    dispatch_stats: Optional[Dict[str, Any]] = None
+
+    def row(self) -> Dict[str, Any]:
+        r = {
+            "mode": self.mode, "arch": self.arch,
+            "tok_s": round(self.tok_per_s.mean, 2),
+            "ci95": [round(x, 2) for x in self.tok_per_s.ci95],
+            "cv_pct": round(100 * self.tok_per_s.cv, 1),
+            "ttft_ms": round(self.ttft_ms.mean, 2),
+            "dispatches_per_token": self.dispatches_per_token,
+        }
+        if self.dispatch_stats is not None:
+            r["dispatch_stats"] = self.dispatch_stats
+        return r
+
+
+@dataclasses.dataclass
+class _Active:
+    """In-flight request state (one slot's worth of work)."""
+    req: ServeRequest
+    state: Dict[str, Any]
+    rng: jax.Array
+    t0: float
+    ttft_s: float = 0.0
+    tokens: List[np.ndarray] = dataclasses.field(default_factory=list)
+    stopped: Optional[np.ndarray] = None     # (B,) bool: row hit a stop token
+    last_tok: Optional[np.ndarray] = None    # (B, 1) int32
+
+    @property
+    def done(self) -> bool:
+        return (len(self.tokens) >= self.req.max_new_tokens
+                or (self.stopped is not None and bool(self.stopped.all())))
+
+
+class InferenceSession:
+    """Serve requests through one compiled ``ExecutionBackend``."""
+
+    def __init__(self, backend: ExecutionBackend) -> None:
+        self.backend = backend
+
+    # ------------------------------------------------------------------
+    def _select_token(self, out: StepOutput, req: ServeRequest,
+                      key: jax.Array) -> np.ndarray:
+        """StepOutput → host (B, 1) int32, honoring sampler + readback."""
+        greedy = req.sampler.kind == "greedy"
+        if req.readback == "logits":
+            # App. H full-readback baseline: whole vocab row crosses the bus
+            logits = np.asarray(out.logits)
+            if greedy:
+                return np.argmax(logits, -1).astype(np.int32).reshape(-1, 1)
+            tok = sample(jax.numpy.asarray(logits), req.sampler, key)
+            return np.asarray(tok, np.int32).reshape(-1, 1)
+        if greedy and out.next_token is not None:
+            # device-side argmax: one int32 per row crosses the bus
+            return np.asarray(out.next_token, np.int32).reshape(-1, 1)
+        tok = sample(out.logits, req.sampler, key)
+        return np.asarray(tok, np.int32).reshape(-1, 1)
+
+    def _emit(self, a: _Active, tok: np.ndarray) -> None:
+        i = len(a.tokens)
+        a.tokens.append(tok)
+        a.last_tok = tok
+        hit = np.isin(tok[:, 0], np.asarray(a.req.stop_tokens, np.int32)) \
+            if a.req.stop_tokens else np.zeros(tok.shape[0], bool)
+        a.stopped = hit if a.stopped is None else (a.stopped | hit)
+        if a.req.stream is not None:
+            a.req.stream(i, tok[:, 0].copy())
+
+    # -- piecewise execution (the scheduler drives these) ----------------
+    def start(self, req: ServeRequest) -> _Active:
+        """Prefill + first token."""
+        prompt = np.atleast_2d(np.asarray(req.prompt, np.int32))
+        t0 = time.perf_counter()
+        state, out = self.backend.prefill(prompt)
+        a = _Active(req=req, state=state, rng=jax.random.PRNGKey(req.seed),
+                    t0=t0)
+        a.rng, key = jax.random.split(a.rng)
+        tok = self._select_token(out, req, key)
+        a.ttft_s = time.perf_counter() - t0
+        self._emit(a, tok)
+        return a
+
+    def step(self, a: _Active) -> bool:
+        """One decode step; returns True when the request is finished."""
+        if a.done:
+            return True
+        a.state, out = self.backend.decode_step(a.state, a.last_tok)
+        a.rng, key = jax.random.split(a.rng)
+        self._emit(a, self._select_token(out, a.req, key))
+        return a.done
+
+    def finish(self, a: _Active) -> ServeResult:
+        toks = np.concatenate(a.tokens, axis=1)
+        stopped = a.stopped is not None and bool(a.stopped.all())
+        caps = self.backend.capabilities
+        return ServeResult(
+            request_id=a.req.request_id,
+            tokens=toks,
+            n_new=toks.shape[1],
+            ttft_s=a.ttft_s,
+            total_s=time.perf_counter() - a.t0,
+            finish_reason="stop" if stopped else "length",
+            backend=caps.name,
+            dispatches_per_token=caps.dispatches_per_token,
+        )
+
+    # ------------------------------------------------------------------
+    def run(self, req: ServeRequest) -> ServeResult:
+        """Serve one request to completion."""
+        caps = self.backend.capabilities
+        fast = (caps.on_device_loop and req.stream is None
+                and not req.stop_tokens and req.readback == "token"
+                and req.max_new_tokens > 1)
+        a = self.start(req)
+        if fast and not a.done:
+            n_rest = req.max_new_tokens - 1
+            rest = np.asarray(self.backend.generate_ondevice(
+                a.state, a.last_tok, n_rest, req.sampler,
+                jax.random.split(a.rng)[1]), np.int32)  # ONE readback
+            for i in range(n_rest):
+                a.tokens.append(rest[:, i:i + 1])
+            return self.finish(a)
+        while not self.step(a):
+            pass
+        return self.finish(a)
+
+    # ------------------------------------------------------------------
+    def benchmark(self, prompt: np.ndarray, n_new: int, *, n_runs: int = 10,
+                  warmup: int = 3, sampler: SamplerConfig = SamplerConfig(),
+                  readback: str = "token") -> BenchmarkReport:
+        """The paper's protocol: warmup to steady state, then timed runs."""
+        def make_req():
+            return ServeRequest(prompt=prompt, max_new_tokens=n_new,
+                                sampler=sampler, readback=readback)
+
+        for _ in range(warmup):
+            self.run(make_req())
+        self.backend.reset_stats()
+        tps, ttfts = [], []
+        for _ in range(n_runs):
+            r = self.run(make_req())
+            tps.append(r.tok_per_s)
+            ttfts.append(1e3 * r.ttft_s)
+        caps = self.backend.capabilities
+        cfg = getattr(self.backend, "cfg", None)
+        return BenchmarkReport(caps.name, cfg.name if cfg else "?",
+                               summarize(tps), summarize(ttfts),
+                               caps.dispatches_per_token, tps, ttfts,
+                               dispatch_stats=self.backend
+                               .dispatch_stats().row())
+
+
+class Scheduler:
+    """Slot-based multi-request scheduler (token-level round-robin).
+
+    Requests queue FIFO; up to ``num_slots`` run concurrently, one decode
+    step per active slot per cycle.  Each slot's request owns an
+    independent backend state — for graph backends that is a private
+    per-layer KV cache allocated by ``kvcache.empty_graph_cache`` at
+    prefill — so requests are isolated by construction.
+    """
+
+    def __init__(self, session: InferenceSession, num_slots: int = 2) -> None:
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.session = session
+        self.num_slots = num_slots
+        self._queue: List[ServeRequest] = []
+
+    def submit(self, req: ServeRequest) -> str:
+        self._queue.append(req)
+        return req.request_id
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def run(self) -> Dict[str, ServeResult]:
+        """Drain the queue; returns {request_id: ServeResult}."""
+        results: Dict[str, ServeResult] = {}
+        active: Dict[int, _Active] = {}
+        while self._queue or active:
+            # admit: fill free slots (prefill allocates the slot's KV state)
+            while self._queue and len(active) < self.num_slots:
+                slot = next(i for i in range(self.num_slots)
+                            if i not in active)
+                a = self.session.start(self._queue.pop(0))
+                if a.done:
+                    results[a.req.request_id] = self.session.finish(a)
+                else:
+                    active[slot] = a
+            # one decode step per active slot, round-robin
+            for slot in sorted(active):
+                a = active[slot]
+                if self.session.step(a):
+                    results[a.req.request_id] = self.session.finish(a)
+                    del active[slot]
+        return results

@@ -129,14 +129,26 @@ def _param_spec(names: Tuple[str, ...], shape: Tuple[int, ...],
 
 
 def _apply_fsdp(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
-    """ZeRO-3 extension: additionally shard the largest still-replicated dim
-    over the ``data`` axis.  On the multi-pod mesh this stays *intra-pod*
-    (params replicate across pods) so the per-layer param all-gathers ride
-    the fast in-pod ICI while only gradient reductions cross pods."""
+    """ZeRO-3 extension: additionally shard a still-replicated dim over the
+    ``data`` axis.  On the multi-pod mesh this stays *intra-pod* (params
+    replicate across pods) so the per-layer param all-gathers ride the fast
+    in-pod ICI while only gradient reductions cross pods.
+
+    Layer-stacked matmul weights (rank ≥ 3, consumed inside the depth
+    ``lax.scan``) may ONLY take the data shard on the leading stack axis:
+    placing it on a feature/contraction dim while the batch is sharded over
+    the same axis makes GSPMD mis-partition the scan body (observed ~0.7
+    abs logit error on the 8-device CPU mesh); if the stack axis does not
+    divide, the leaf stays as-is rather than risk a wrong answer."""
     n = mesh.shape.get("data", 1)
     if n <= 1:
         return spec
     parts = list(spec) + [None] * (len(shape) - len(spec))
+    if len(shape) >= 3:
+        if parts[0] is None and shape[0] >= n and _div(shape[0], n):
+            parts[0] = "data"
+            return P(*parts)
+        return spec
     for i in sorted(range(len(shape)), key=lambda j: -shape[j]):
         if parts[i] is None and shape[i] >= n and _div(shape[i], n):
             parts[i] = "data"

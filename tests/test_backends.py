@@ -1,0 +1,234 @@
+"""The ExecutionBackend protocol + production session API.
+
+Covers the redesign's acceptance surface: registry round-trip, greedy
+token parity across ALL registered backends on bench-0.5b, streaming
+callback ordering, sampler wiring, stop conditions, and scheduler
+multi-request KV-slot isolation.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.bench import BENCH_05B
+from repro.models import build_model
+from repro.serving import (GenerationEngine, InferenceSession, SamplerConfig,
+                           Scheduler, ServeRequest, available_backends,
+                           create_backend, register_backend)
+from repro.serving.backends.base import _REGISTRY
+
+ALL_MODES = ("F0", "F1", "F2", "F3", "F4", "FULL", "model", "ondevice")
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke_config("qwen2-1.5b", layers=3)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompt = np.array([[5, 9, 2, 14]], np.int32)
+    return model, params, prompt
+
+
+@pytest.fixture(scope="module")
+def bench05b():
+    model = build_model(BENCH_05B)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompt = np.array([[11, 23, 37, 41]], np.int32)
+    return model, params, prompt
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_round_trip(smoke):
+    model, params, _ = smoke
+    assert set(ALL_MODES) <= set(available_backends())
+    for name in ALL_MODES:
+        b = create_backend(name, model, params, batch=1, max_len=16)
+        assert b.capabilities.name == name
+        assert b.capabilities.dispatches_per_token >= 0
+
+
+def test_registry_unknown_backend_lists_available(smoke):
+    model, params, _ = smoke
+    with pytest.raises(ValueError, match="F0"):
+        create_backend("no-such-backend", model, params)
+
+
+def test_registry_rejects_duplicate_name():
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend("F0")(object)
+
+
+def test_register_custom_backend(smoke):
+    model, params, prompt = smoke
+
+    @register_backend("model-alias")
+    class Alias(_REGISTRY["model"]):
+        pass
+
+    try:
+        b = create_backend("model-alias", model, params, batch=1, max_len=16)
+        r = InferenceSession(b).run(ServeRequest(prompt=prompt,
+                                                 max_new_tokens=3))
+        assert r.tokens.shape == (1, 3)
+    finally:
+        _REGISTRY.pop("model-alias")
+
+
+# ---------------------------------------------------------------------------
+# parity — the acceptance criterion: identical greedy streams on bench-0.5b
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [m for m in ALL_MODES if m != "model"])
+def test_greedy_parity_on_bench05b(bench05b, mode):
+    model, params, prompt = bench05b
+    n_new = 4
+    ref = InferenceSession(create_backend("model", model, params, batch=1,
+                                          max_len=16)) \
+        .run(ServeRequest(prompt=prompt, max_new_tokens=n_new))
+    out = InferenceSession(create_backend(mode, model, params, batch=1,
+                                          max_len=16)) \
+        .run(ServeRequest(prompt=prompt, max_new_tokens=n_new))
+    np.testing.assert_array_equal(out.tokens, ref.tokens)
+    assert out.finish_reason == "length"
+    assert out.total_s >= out.ttft_s > 0
+
+
+# ---------------------------------------------------------------------------
+# session behavior
+# ---------------------------------------------------------------------------
+
+def test_streaming_callback_ordering(smoke):
+    model, params, prompt = smoke
+    session = InferenceSession(create_backend("F3", model, params, batch=1,
+                                              max_len=32))
+    seen = []
+    r = session.run(ServeRequest(
+        prompt=prompt, max_new_tokens=6,
+        stream=lambda i, toks: seen.append((i, int(toks[0])))))
+    assert [i for i, _ in seen] == list(range(6))
+    np.testing.assert_array_equal(np.array([t for _, t in seen]),
+                                  r.tokens[0])
+
+
+def test_stop_token_ends_generation(smoke):
+    model, params, prompt = smoke
+    session = InferenceSession(create_backend("model", model, params,
+                                              batch=1, max_len=32))
+    full = session.run(ServeRequest(prompt=prompt, max_new_tokens=8))
+    stop = int(full.tokens[0, 2])  # a token known to occur mid-stream
+    first = int(np.argmax(full.tokens[0] == stop))  # earliest occurrence
+    r = session.run(ServeRequest(prompt=prompt, max_new_tokens=8,
+                                 stop_tokens=(stop,)))
+    assert r.finish_reason == "stop"
+    assert r.n_new == first + 1
+    np.testing.assert_array_equal(r.tokens[0], full.tokens[0, :first + 1])
+
+
+def test_sampler_wiring_deterministic_per_seed(smoke):
+    model, params, prompt = smoke
+    session = InferenceSession(create_backend("model", model, params,
+                                              batch=1, max_len=64))
+    cfg = SamplerConfig("temperature", temperature=1.5)
+    a = session.run(ServeRequest(prompt=prompt, max_new_tokens=8,
+                                 sampler=cfg, seed=7))
+    b = session.run(ServeRequest(prompt=prompt, max_new_tokens=8,
+                                 sampler=cfg, seed=7))
+    c = session.run(ServeRequest(prompt=prompt, max_new_tokens=8,
+                                 sampler=cfg, seed=8))
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert not np.array_equal(a.tokens, c.tokens)  # PRNG actually wired
+
+
+def test_ondevice_sampled_generation_runs(smoke):
+    """The single-dispatch loop supports non-greedy sampling in-graph."""
+    model, params, prompt = smoke
+    session = InferenceSession(create_backend("ondevice", model, params,
+                                              batch=1, max_len=64))
+    r = session.run(ServeRequest(prompt=prompt, max_new_tokens=8,
+                                 sampler=SamplerConfig("topk",
+                                                       temperature=0.8,
+                                                       top_k=5)))
+    assert r.tokens.shape == (1, 8)
+    assert (0 <= r.tokens).all() and (r.tokens < model.cfg.vocab_size).all()
+
+
+def test_logits_readback_matches_token_readback(smoke):
+    model, params, prompt = smoke
+    session = InferenceSession(create_backend("F3", model, params, batch=1,
+                                              max_len=32))
+    t1 = session.run(ServeRequest(prompt=prompt, max_new_tokens=6)).tokens
+    t2 = session.run(ServeRequest(prompt=prompt, max_new_tokens=6,
+                                  readback="logits")).tokens
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_dispatch_stats_uniform_across_backends(smoke):
+    model, params, prompt = smoke
+    keys = None
+    for mode in ("F0", "FULL", "model", "ondevice"):
+        backend = create_backend(mode, model, params, batch=1, max_len=32)
+        InferenceSession(backend).run(ServeRequest(prompt=prompt,
+                                                   max_new_tokens=4))
+        row = backend.dispatch_stats().row()
+        assert row["steps"] > 0 and row["dispatches"] > 0
+        keys = keys or set(row)
+        assert set(row) == keys  # same reporting schema for every backend
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_multi_request_kv_slot_isolation(smoke):
+    """Interleaved requests produce exactly the tokens they produce alone —
+    per-slot KV caches cannot leak across requests."""
+    model, params, _ = smoke
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, model.cfg.vocab_size, size=(1, 4))
+               .astype(np.int32) for _ in range(3)]
+    backend = create_backend("F3", model, params, batch=1, max_len=32)
+    session = InferenceSession(backend)
+
+    serial = [session.run(ServeRequest(prompt=p, max_new_tokens=6)).tokens
+              for p in prompts]
+
+    sched = Scheduler(session, num_slots=2)
+    ids = [sched.submit(ServeRequest(prompt=p, max_new_tokens=6,
+                                     request_id=f"r{i}"))
+           for i, p in enumerate(prompts)]
+    results = sched.run()
+    assert set(results) == set(ids)
+    for i, rid in enumerate(ids):
+        np.testing.assert_array_equal(results[rid].tokens, serial[i])
+
+
+def test_scheduler_mixed_lengths_and_order(smoke):
+    model, params, prompt = smoke
+    session = InferenceSession(create_backend("model", model, params,
+                                              batch=1, max_len=64))
+    sched = Scheduler(session, num_slots=3)
+    lens = [2, 9, 5, 1]
+    ids = [sched.submit(ServeRequest(prompt=prompt, max_new_tokens=n))
+           for n in lens]
+    results = sched.run()
+    for rid, n in zip(ids, lens):
+        assert results[rid].n_new == n
+        assert results[rid].finish_reason == "length"
+
+
+# ---------------------------------------------------------------------------
+# shim
+# ---------------------------------------------------------------------------
+
+def test_generation_engine_shim_matches_session(smoke):
+    model, params, prompt = smoke
+    shim = GenerationEngine(model, params, mode="F2", batch=1, max_len=32)
+    r1 = shim.generate(prompt, 6)
+    r2 = InferenceSession(create_backend("F2", model, params, batch=1,
+                                         max_len=32)) \
+        .run(ServeRequest(prompt=prompt, max_new_tokens=6))
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    assert shim.dispatches_per_token == r2.dispatches_per_token

@@ -2,6 +2,7 @@
 (Table 14), and the HLO cost parser."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev extra (pip install -r requirements.txt + dev extra)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

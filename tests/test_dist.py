@@ -67,6 +67,9 @@ def test_sharded_train_step_matches_single_device():
 
 
 @pytest.mark.slow
+@pytest.mark.xfail(reason="repro.dist.pipeline not implemented yet — the "
+                   "pipeline-parallel subsystem lands in a later PR",
+                   raises=AssertionError, strict=True)
 def test_pipeline_parallel_matches_sequential():
     _run("""
         from repro.dist.pipeline import pipeline_apply
@@ -88,6 +91,9 @@ def test_pipeline_parallel_matches_sequential():
 
 
 @pytest.mark.slow
+@pytest.mark.xfail(reason="repro.dist.compression not implemented yet — "
+                   "int8 compressed collectives land in a later PR",
+                   raises=AssertionError, strict=True)
 def test_compressed_psum_error_bounded():
     _run("""
         from functools import partial
@@ -132,6 +138,9 @@ def test_dryrun_cell_on_test_mesh():
 
 
 @pytest.mark.slow
+@pytest.mark.xfail(reason="repro.dist.elastic not implemented yet — "
+                   "elastic checkpoint restore lands in a later PR",
+                   raises=AssertionError, strict=True)
 def test_elastic_restore_across_meshes(tmp_path):
     """Checkpoint under an 8-device mesh, restore onto a 4-device mesh."""
     _run(f"""

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev extra (pip install -r requirements.txt + dev extra)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

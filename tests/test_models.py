@@ -117,6 +117,8 @@ def test_moe_balance_aux_positive(rng):
 
 
 def test_moe_capacity_properties():
+    pytest.importorskip("hypothesis", reason="property tests need the "
+                        "hypothesis dev extra")
     from repro.models.moe import capacity
     from hypothesis import given, settings
     from hypothesis import strategies as st
