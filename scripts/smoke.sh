@@ -3,13 +3,19 @@
 #
 #   scripts/smoke.sh            # full tier-1 + parity smoke
 #   scripts/smoke.sh --fast     # parity smoke only
+#   scripts/smoke.sh --dist     # parity smoke + multi-device dist tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-if [[ "${1:-}" != "--fast" ]]; then
+if [[ "${1:-}" != "--fast" && "${1:-}" != "--dist" ]]; then
     echo "== tier-1 tests =="
     python -m pytest -x -q
+fi
+
+if [[ "${1:-}" == "--dist" ]]; then
+    echo "== repro.dist multi-device tests (subprocess, 8 forced devices) =="
+    python -m pytest -x -q -m slow -k dist tests/
 fi
 
 echo "== 2-backend parity smoke (session API, bench-0.5b) =="

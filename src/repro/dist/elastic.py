@@ -1,0 +1,55 @@
+"""Elastic checkpoint restore — resume training on a different mesh shape.
+
+Checkpoints are written as host-global numpy (``train/checkpoint.py``), so
+they carry no mesh assumptions; what changes across a re-scale event
+("pod loss": half the fleet disappears) is only the *sharding* each leaf
+should land on.  ``state_shardings_for`` derives that layout for any mesh
+from the model's abstract train-state shapes + ``sharding/rules.py``, and
+``restore_on_mesh`` feeds it to ``checkpoint.restore(shardings=…)`` so
+every leaf is ``device_put`` directly onto the new mesh — no detour
+through the default device and no second host→device transfer.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+from jax.sharding import Mesh
+
+from repro.models.factory import Model
+from repro.sharding import rules
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig
+
+
+def state_shardings_for(model: Model, mesh: Mesh, *,
+                        opt_cfg: AdamWConfig = AdamWConfig(),
+                        fsdp: bool = False,
+                        compression: bool = False) -> Tuple[Any, Any]:
+    """(abstract state shapes, NamedSharding pytree) for ``mesh``.
+
+    The shapes come from ``jax.eval_shape`` (no allocation), so this is
+    safe to call for arbitrarily large models before any restore.
+    """
+    from repro.launch import steps as S
+    shapes = S.train_state_specs(model, opt_cfg, compression=compression)
+    return shapes, rules.state_shardings(shapes, mesh, fsdp=fsdp)
+
+
+def restore_on_mesh(path: str, model: Model, mesh: Mesh, *,
+                    step: Optional[int] = None,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    fsdp: bool = False,
+                    compression: bool = False) -> Tuple[int, Any]:
+    """Restore a checkpoint written under ANY mesh onto ``mesh``.
+
+    Returns ``(step, state)`` with every leaf already resident at its
+    ``rules.state_shardings`` placement for the new mesh — the caller can
+    jit the train step against the same shardings and continue.
+
+    ``compression`` must match how the checkpoint was written (it decides
+    whether the state carries the ``grad_err`` residual pytree); a
+    mismatch surfaces as a pytree-structure error from the restore.
+    """
+    _, shardings = state_shardings_for(model, mesh, opt_cfg=opt_cfg,
+                                       fsdp=fsdp, compression=compression)
+    return ckpt.restore(path, step, shardings=shardings)

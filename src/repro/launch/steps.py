@@ -16,21 +16,21 @@ from repro.train.trainer import make_train_step
 
 
 def train_step_fn(model: Model, *, grad_accum: int = 1, remat: bool = True,
-                  opt_cfg: AdamWConfig = AdamWConfig()) -> Callable:
+                  opt_cfg: AdamWConfig = AdamWConfig(),
+                  compression: bool = False) -> Callable:
     opt = adamw(opt_cfg)
-    return make_train_step(model, opt, grad_accum=grad_accum, remat=remat)
+    return make_train_step(model, opt, grad_accum=grad_accum, remat=remat,
+                           compression=compression)
 
 
-def train_state_specs(model: Model, opt_cfg: AdamWConfig = AdamWConfig()):
+def train_state_specs(model: Model, opt_cfg: AdamWConfig = AdamWConfig(), *,
+                      compression: bool = False):
     """Abstract train-state shapes (no allocation)."""
+    from repro.train.trainer import init_state
     opt = adamw(opt_cfg)
-
-    def init():
-        params = model.init_params(jax.random.PRNGKey(0))
-        return {"params": params, "opt": opt.init(params),
-                "step": jax.numpy.zeros((), jax.numpy.int32)}
-
-    return jax.eval_shape(init)
+    return jax.eval_shape(
+        lambda: init_state(model, jax.random.PRNGKey(0), opt,
+                           compression=compression))
 
 
 def prefill_step_fn(model: Model, shape: ShapeSpec) -> Callable:

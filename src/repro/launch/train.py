@@ -30,6 +30,9 @@ def main() -> None:
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--remat", action="store_true")
     ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--grad-compression", action="store_true",
+                    help="int8 error-feedback gradient compression "
+                         "(repro.dist.compression)")
     ap.add_argument("--mesh", default="host",
                     help="host (no mesh) | testN (N local devices)")
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -52,7 +55,7 @@ def main() -> None:
     tc = TrainConfig(
         steps=args.steps, grad_accum=args.grad_accum, remat=args.remat,
         log_every=args.log_every, ckpt_every=args.ckpt_every,
-        ckpt_dir=args.ckpt_dir,
+        ckpt_dir=args.ckpt_dir, grad_compression=args.grad_compression,
         optimizer=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                               total_steps=args.steps))
 
@@ -74,18 +77,21 @@ def main() -> None:
     from repro.launch.dryrun import _mesh
     mesh = _mesh(args.mesh)
     from repro.launch import steps as S
-    state_shapes = S.train_state_specs(model)
+    state_shapes = S.train_state_specs(model,
+                                       compression=args.grad_compression)
     with mesh:
         state_sh = rules.state_shardings(state_shapes, mesh, fsdp=args.fsdp)
         fn = S.train_step_fn(model, grad_accum=args.grad_accum,
-                             remat=args.remat)
+                             remat=args.remat,
+                             compression=args.grad_compression)
         step_fn = jax.jit(fn, in_shardings=(state_sh, None),
                           out_shardings=(state_sh, None),
                           donate_argnums=(0,))
         from repro.train.trainer import init_state
         from repro.train.optimizer import adamw
         state = jax.device_put(
-            init_state(model, jax.random.PRNGKey(0), adamw(tc.optimizer)),
+            init_state(model, jax.random.PRNGKey(0), adamw(tc.optimizer),
+                       compression=args.grad_compression),
             state_sh)
         it = iter(data)
         t0 = time.perf_counter()

@@ -227,6 +227,35 @@ def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     }
 
 
+def prefill_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, max_len: int, *,
+                  chunked: bool) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One layer of the cached prefill path → (x', (k_cache, v_cache)).
+
+    Shared by the depth ``lax.scan`` in ``prefill`` and by the
+    pipeline-parallel dist backend, which scans it over a per-stage layer
+    chunk inside ``shard_map``.
+    """
+    b, s, _ = x.shape
+    h = cfg.resolved_head_dim
+    xn = L.rmsnorm(x, p["attn_norm"], cfg.rms_eps)
+    q, k, v = _project_qkv(p["attn"], cfg, xn)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if chunked:
+        o = L.chunked_causal_attention(q, k, v, window=cfg.sliding_window)
+    else:
+        o = L.causal_attention(q, k, v, window=cfg.sliding_window)
+    x = constrain_hidden(x + L.linear(o.reshape(b, s, -1), p["attn"]["wo"]))
+    f, _ = ffn_block(p["ffn"], cfg, L.rmsnorm(x, p["ffn_norm"], cfg.rms_eps))
+    x = constrain_hidden(x + f)
+    kc = jnp.zeros((b, max_len, cfg.num_kv_heads, h), k.dtype)
+    vc = jnp.zeros_like(kc)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+    return x, (kc, vc)
+
+
 def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
             max_len: int, *, extra_embeds: Optional[jax.Array] = None
             ) -> Tuple[Params, jax.Array]:
@@ -237,33 +266,37 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
     b, s, _ = x.shape
     positions = jnp.arange(s)
     chunked = s >= CHUNKED_ATTENTION_MIN_SEQ
-    h = cfg.resolved_head_dim
 
     def scan_body(carry, layer_params):
-        xc = carry
-        p = layer_params
-        xn = L.rmsnorm(xc, p["attn_norm"], cfg.rms_eps)
-        q, k, v = _project_qkv(p["attn"], cfg, xn)
-        q = L.apply_rope(q, positions, cfg.rope_theta)
-        k = L.apply_rope(k, positions, cfg.rope_theta)
-        if chunked:
-            o = L.chunked_causal_attention(q, k, v, window=cfg.sliding_window)
-        else:
-            o = L.causal_attention(q, k, v, window=cfg.sliding_window)
-        xc = constrain_hidden(xc + L.linear(o.reshape(b, s, -1),
-                                            p["attn"]["wo"]))
-        f, _ = ffn_block(p["ffn"], cfg, L.rmsnorm(xc, p["ffn_norm"], cfg.rms_eps))
-        xc = constrain_hidden(xc + f)
-        kc = jnp.zeros((b, max_len, cfg.num_kv_heads, h), k.dtype)
-        vc = jnp.zeros_like(kc)
-        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
-        return xc, (kc, vc)
+        return prefill_block(layer_params, cfg, carry, positions, max_len,
+                             chunked=chunked)
 
     x, (kcache, vcache) = jax.lax.scan(scan_body, x, params["blocks"])
     logits = unembed(params, cfg, x[:, -1:, :])
     cache = {"k": kcache, "v": vcache, "pos": jnp.int32(s)}
     return cache, logits
+
+
+def decode_block(p: Params, cfg: ModelConfig, x: jax.Array, kc: jax.Array,
+                 vc: jax.Array, pos: jax.Array, positions: jax.Array
+                 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One layer of the single-token decode path → (x', (kc', vc')).
+
+    Shared by the depth ``lax.scan`` in ``decode_step`` and by the
+    pipeline-parallel dist backend (per-stage layer chunks under
+    ``shard_map``).
+    """
+    b = x.shape[0]
+    xn = L.rmsnorm(x, p["attn_norm"], cfg.rms_eps)
+    q, k, v = _project_qkv(p["attn"], cfg, xn)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+    o = L.decode_attention(q, kc, vc, pos + 1, window=cfg.sliding_window)
+    x = x + L.linear(o.reshape(b, 1, -1), p["attn"]["wo"])
+    f, _ = ffn_block(p["ffn"], cfg, L.rmsnorm(x, p["ffn_norm"], cfg.rms_eps))
+    return x + f, (kc, vc)
 
 
 def decode_step(params: Params, cfg: ModelConfig, cache: Params,
@@ -275,18 +308,8 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Params,
     positions = jnp.full((b, 1), pos, jnp.int32)
 
     def scan_body(carry, scan_in):
-        xc = carry
         p, kc, vc = scan_in
-        xn = L.rmsnorm(xc, p["attn_norm"], cfg.rms_eps)
-        q, k, v = _project_qkv(p["attn"], cfg, xn)
-        q = L.apply_rope(q, positions, cfg.rope_theta)
-        k = L.apply_rope(k, positions, cfg.rope_theta)
-        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
-        o = L.decode_attention(q, kc, vc, pos + 1, window=cfg.sliding_window)
-        xc = xc + L.linear(o.reshape(b, 1, -1), p["attn"]["wo"])
-        f, _ = ffn_block(p["ffn"], cfg, L.rmsnorm(xc, p["ffn_norm"], cfg.rms_eps))
-        return xc + f, (kc, vc)
+        return decode_block(p, cfg, carry, kc, vc, pos, positions)
 
     x, (kcache, vcache) = jax.lax.scan(
         scan_body, x, (params["blocks"], cache["k"], cache["v"]))

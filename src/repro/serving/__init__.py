@@ -3,7 +3,7 @@ session API, and the back-compat ``GenerationEngine`` shim."""
 from repro.serving.backends import (BackendCapabilities, DispatchStats,
                                     ExecutionBackend, StepOutput,
                                     available_backends, create_backend,
-                                    register_backend)
+                                    get_backend, register_backend)
 from repro.serving.engine import GenerationEngine, GenerationResult
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.session import (BenchmarkReport, InferenceSession,
@@ -11,7 +11,7 @@ from repro.serving.session import (BenchmarkReport, InferenceSession,
 
 __all__ = [
     "BackendCapabilities", "DispatchStats", "ExecutionBackend", "StepOutput",
-    "available_backends", "create_backend", "register_backend",
+    "available_backends", "create_backend", "get_backend", "register_backend",
     "GenerationEngine", "GenerationResult", "SamplerConfig", "sample",
     "BenchmarkReport", "InferenceSession", "Scheduler", "ServeRequest",
     "ServeResult",

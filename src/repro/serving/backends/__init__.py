@@ -1,17 +1,20 @@
 """Execution backends — interchangeable dispatch regimes behind one
 protocol.  Importing this package registers the built-in backends:
 ``F0``–``F4`` and ``FULL`` (dispatch graphs), ``model`` (jitted scan
-path), ``ondevice`` (whole generation loop in one dispatch)."""
+path), ``ondevice`` (whole generation loop in one dispatch), ``dist``
+(pipeline-parallel prefill/decode over a ``("stage",)`` mesh)."""
 from repro.serving.backends.base import (BackendCapabilities, DispatchStats,
                                          ExecutionBackend, State, StepOutput,
                                          available_backends, create_backend,
-                                         register_backend)
+                                         get_backend, register_backend)
+from repro.serving.backends.dist import DistBackend
 from repro.serving.backends.graph import GRAPH_MODES, GraphBackend
 from repro.serving.backends.model import ModelBackend
 from repro.serving.backends.ondevice import OnDeviceBackend
 
 __all__ = [
     "BackendCapabilities", "DispatchStats", "ExecutionBackend", "State",
-    "StepOutput", "available_backends", "create_backend", "register_backend",
-    "GRAPH_MODES", "GraphBackend", "ModelBackend", "OnDeviceBackend",
+    "StepOutput", "available_backends", "create_backend", "get_backend",
+    "register_backend", "DistBackend", "GRAPH_MODES", "GraphBackend",
+    "ModelBackend", "OnDeviceBackend",
 ]

@@ -164,14 +164,19 @@ def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def create_backend(name: str, model, params, *, batch: int = 1,
-                   max_len: int = 128, **kw) -> ExecutionBackend:
-    """Instantiate the backend registered under ``name``."""
+def get_backend(name: str) -> Callable[..., ExecutionBackend]:
+    """Registry round-trip: the factory registered under ``name``."""
     try:
-        factory = _REGISTRY[name]
+        return _REGISTRY[name]
     except KeyError:
         raise ValueError(
             f"unknown backend {name!r}; available: {available_backends()}"
         ) from None
+
+
+def create_backend(name: str, model, params, *, batch: int = 1,
+                   max_len: int = 128, **kw) -> ExecutionBackend:
+    """Instantiate the backend registered under ``name``."""
+    factory = get_backend(name)
     return factory(model, params, mode=name, batch=batch, max_len=max_len,
                    **kw)

@@ -1,0 +1,223 @@
+"""``dist`` backend: pipeline-parallel serving over a ``("stage",)`` mesh.
+
+Layers are split into contiguous chunks across the mesh's ``stage`` axis
+(the transformer's stacked leading layer axis maps directly onto
+``PartitionSpec("stage")``, as does the per-layer KV cache), and each
+prefill/decode step runs the ``repro.dist.pipeline`` fill/drain schedule
+inside ``shard_map``: every tick one stage applies its layer chunk via the
+SAME ``transformer.prefill_block`` / ``decode_block`` the single-device
+path scans, then activations rotate stage→stage+1 via ``lax.ppermute``.
+
+Serving decodes one token at a time, so each step is a single-microbatch
+pipeline — ``n_stages`` ticks, bubble fraction (S−1)/S — which is the
+worst-case schedule the paper's dispatch-amortization argument starts
+from; ``pipeline_stats()`` reports it next to the uniform
+``dispatch_stats()`` row.  The whole step is still ONE jitted executable
+(1 dispatch/token), so multi-device serving keeps the §9.2 dispatch
+regime.
+
+The mesh is built over the host's devices (force a fleet with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the first
+jax import); on one device it degenerates to a 1-stage pipeline running
+the identical code path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.engine import RunStats
+from repro.dist.pipeline import PipelineStats, ring_perm
+from repro.models import transformer
+from repro.models.transformer import CHUNKED_ATTENTION_MIN_SEQ
+from repro.serving.backends.base import (BackendCapabilities, ExecutionBackend,
+                                         State, StepOutput, register_backend)
+
+
+def _auto_stages(num_layers: int, n_devices: int) -> int:
+    """Largest stage count ≤ n_devices that divides the layer stack."""
+    for s in range(min(num_layers, n_devices), 0, -1):
+        if num_layers % s == 0:
+            return s
+    return 1
+
+
+@register_backend("dist")
+class DistBackend(ExecutionBackend):
+    """Pipeline-parallel prefill/decode for the transformer families."""
+
+    def __init__(self, model, params, *, mode: str = "dist", batch: int = 1,
+                 max_len: int = 128, stages: int = 0) -> None:
+        super().__init__()
+        cfg = model.cfg
+        if cfg.family not in ("dense",) or cfg.moe is not None:
+            raise ValueError(
+                f"dist backend supports dense transformers only, got "
+                f"family={cfg.family!r} (moe={cfg.moe is not None})")
+        devs = jax.devices()
+        n_stages = stages or _auto_stages(cfg.num_layers, len(devs))
+        if cfg.num_layers % n_stages:
+            raise ValueError(f"{cfg.num_layers} layers do not divide over "
+                             f"{n_stages} stages")
+        if n_stages > len(devs):
+            raise RuntimeError(
+                f"{n_stages} stages need {n_stages} devices, have "
+                f"{len(devs)} — set XLA_FLAGS="
+                "--xla_force_host_platform_device_count before jax init")
+        self.model = model
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.stages = n_stages
+        self.mesh = jax.make_mesh((n_stages,), ("stage",),
+                                  devices=devs[:n_stages])
+
+        # layer-stacked leaves → P("stage") on the stack axis; the rest
+        # (embed / final_norm / lm_head) replicate across stages
+        stage_sh = NamedSharding(self.mesh, P("stage"))
+        repl = NamedSharding(self.mesh, P())
+        self.params = {
+            k: (jax.tree.map(lambda a: jax.device_put(a, stage_sh), v)
+                if k == "blocks" else jax.device_put(v, repl))
+            for k, v in params.items()
+        }
+
+        self._jit_prefill = jax.jit(self._sharded_prefill)
+        self._jit_decode = jax.jit(self._sharded_decode)
+        self.capabilities = BackendCapabilities(
+            name=mode, dispatches_per_token=1, device_argmax=True)
+
+    # ------------------------------------------------------------------
+    def pipeline_stats(self) -> PipelineStats:
+        """Schedule accounting: serving is single-microbatch per step."""
+        return PipelineStats(self.stages, self.cfg.num_layers // self.stages,
+                             n_micro=1)
+
+    # ------------------------------------------------------------------
+    def _pipeline_blocks(self, block_step):
+        """Build the fill/drain shard_map body for one pipeline pass.
+
+        ``block_step(blocks_local, h, carry_local) → (h', carry_local')``
+        applies this stage's layer chunk; ``carry_local`` is per-stage
+        state (KV caches) that stays resident — only activations rotate.
+        """
+        S = self.stages
+        perm = ring_perm(S)
+
+        def body(blocks_local, x, carry_local):
+            stage = lax.axis_index("stage")
+            state = x                       # replicated feed; stage 0's view
+            for t in range(S):              # 1 microbatch: S fill/drain ticks
+                h, new_carry = block_step(blocks_local, state, carry_local)
+                keep = stage == t           # tick t is stage t's useful work
+                carry_local = jax.tree.map(
+                    lambda new, old: jnp.where(keep, new, old),
+                    new_carry, carry_local)
+                if S > 1:
+                    state = lax.ppermute(h, "stage", perm)
+                else:
+                    state = h
+            # after the last rotation stage 0 holds the final activations
+            return lax.psum(jnp.where(stage == 0, state, 0), "stage"), \
+                carry_local
+
+        return body
+
+    # ------------------------------------------------------------------
+    def _sharded_prefill(self, params, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        b, s, _ = x.shape
+        positions = jnp.arange(s)
+        chunked = s >= CHUNKED_ATTENTION_MIN_SEQ
+        h = cfg.resolved_head_dim
+        kv_shape = (cfg.num_layers // self.stages, b, self.max_len,
+                    cfg.num_kv_heads, h)
+
+        def block_step(blocks_local, xc, carry):
+            def one(c, p):
+                return transformer.prefill_block(p, cfg, c, positions,
+                                                 self.max_len,
+                                                 chunked=chunked)
+            return lax.scan(one, xc, blocks_local)
+
+        body = self._pipeline_blocks(block_step)
+
+        def run(blocks, x):
+            from repro.dist import shard_map
+            kv0 = (jnp.zeros(kv_shape, jnp.dtype(cfg.dtype)),
+                   jnp.zeros(kv_shape, jnp.dtype(cfg.dtype)))
+            fn = shard_map(lambda bl, xx: body(bl, xx, kv0),
+                           mesh=self.mesh,
+                           in_specs=(jax.tree.map(lambda _: P("stage"),
+                                                  blocks), P()),
+                           out_specs=(P(), (P("stage"), P("stage"))),
+                           check_rep=False)
+            return fn(blocks, x)
+
+        x, (kcache, vcache) = run(params["blocks"], x)
+        logits = transformer.unembed(params, cfg, x[:, -1:, :])
+        cache = {"k": kcache, "v": vcache, "pos": jnp.int32(s)}
+        return cache, logits, jnp.argmax(logits, -1).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    def _sharded_decode(self, params, cache, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        b = x.shape[0]
+        pos = cache["pos"]
+        positions = jnp.full((b, 1), pos, jnp.int32)
+
+        def block_step(blocks_local, xc, carry):
+            kc, vc = carry
+
+            def one(c, scan_in):
+                p, kci, vci = scan_in
+                return transformer.decode_block(p, cfg, c, kci, vci, pos,
+                                                positions)
+
+            xc, (kc, vc) = lax.scan(one, xc, (blocks_local, kc, vc))
+            return xc, (kc, vc)
+
+        body = self._pipeline_blocks(block_step)
+
+        def run(blocks, x, kc, vc):
+            from repro.dist import shard_map
+            fn = shard_map(lambda bl, xx, k, v: body(bl, xx, (k, v)),
+                           mesh=self.mesh,
+                           in_specs=(jax.tree.map(lambda _: P("stage"),
+                                                  blocks), P(),
+                                     P("stage"), P("stage")),
+                           out_specs=(P(), (P("stage"), P("stage"))),
+                           check_rep=False)
+            return fn(blocks, x, kc, vc)
+
+        x, (kcache, vcache) = run(params["blocks"], x, cache["k"], cache["v"])
+        logits = transformer.unembed(params, cfg, x)
+        cache = {"k": kcache, "v": vcache, "pos": pos + 1}
+        return cache, logits, jnp.argmax(logits, -1).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    def _run(self, fn, *args) -> Tuple[object, StepOutput]:
+        t0 = time.perf_counter()
+        cache, logits, nxt = fn(*args)
+        enq = time.perf_counter() - t0
+        self._record(RunStats(wall_s=enq, dispatches=1, shape_ops=0,
+                              sync_mode="none", enqueue_s=enq))
+        return cache, StepOutput(logits, nxt)
+
+    def prefill(self, tokens) -> Tuple[State, StepOutput]:
+        tokens = jnp.asarray(tokens, jnp.int32)
+        cache, out = self._run(self._jit_prefill, self.params, tokens)
+        return {"cache": cache}, out
+
+    def decode_step(self, state: State, tok) -> Tuple[State, StepOutput]:
+        cache, out = self._run(self._jit_decode, self.params, state["cache"],
+                               jnp.asarray(tok, jnp.int32))
+        return {"cache": cache}, out

@@ -241,14 +241,20 @@ def cache_pspecs(cache: Any, mesh: Mesh, batch: int) -> Any:
 
 def state_shardings(state_shapes: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
     """Shardings for {"params", "opt": {"m","v","count"}, "step"} — moments
-    follow their parameter's spec (they are elementwise)."""
+    follow their parameter's spec (they are elementwise), as does the
+    optional ``grad_err`` residual pytree of the compressed-collective
+    trainer hook (``repro.dist.compression``)."""
     pspecs = param_pspecs(state_shapes["params"], mesh, fsdp=fsdp)
-    return {
-        "params": jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+    named = lambda specs: jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+    out = {
+        "params": named(pspecs),
         "opt": {
-            "m": jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
-            "v": jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+            "m": named(pspecs),
+            "v": named(pspecs),
             "count": NamedSharding(mesh, P()),
         },
         "step": NamedSharding(mesh, P()),
     }
+    if isinstance(state_shapes, dict) and "grad_err" in state_shapes:
+        out["grad_err"] = named(pspecs)
+    return out

@@ -83,11 +83,18 @@ def latest_step(base: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore(base: str, step: Optional[int] = None, *,
-            like: Any = None) -> Tuple[int, Any]:
-    """Load a checkpoint.  ``like``: optional pytree of ShapeDtypeStructs /
-    arrays whose shardings the restored leaves are device_put onto (the
-    elastic re-mesh path)."""
+def restore(base: str, step: Optional[int] = None, *, like: Any = None,
+            shardings: Any = None) -> Tuple[int, Any]:
+    """Load a checkpoint.
+
+    ``shardings``: optional pytree of ``jax.sharding.Sharding`` matching the
+    saved state; every leaf is ``device_put`` DIRECTLY onto its sharding —
+    the elastic re-mesh path, with no intermediate landing on the default
+    device (which a later transfer would have to undo).
+
+    ``like``: optional pytree of ShapeDtypeStructs / arrays whose attached
+    shardings (if any) the restored leaves are device_put onto.
+    """
     if step is None:
         step = latest_step(base)
         if step is None:
@@ -98,7 +105,10 @@ def restore(base: str, step: Optional[int] = None, *,
     data = np.load(os.path.join(d, "arrays.npz"))
     leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
-    if like is not None:
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(np.asarray(x), s), tree, shardings)
+    elif like is not None:
         def put(x, ref):
             sharding = getattr(ref, "sharding", None)
             if sharding is not None:

@@ -37,16 +37,23 @@ class TrainConfig:
     ckpt_dir: Optional[str] = None
     max_retries: int = 3
     optimizer: AdamWConfig = AdamWConfig()
+    grad_compression: bool = False
 
 
-def init_state(model: Model, rng, opt: adamw) -> TrainState:
+def init_state(model: Model, rng, opt: adamw, *,
+               compression: bool = False) -> TrainState:
     params = model.init_params(rng)
-    return {"params": params, "opt": opt.init(params),
-            "step": jnp.zeros((), jnp.int32)}
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if compression:
+        # error-feedback residuals for dist.compression (zeros at step 0)
+        state["grad_err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
 
 
 def make_train_step(model: Model, opt: adamw, *, grad_accum: int = 1,
-                    remat: bool = False
+                    remat: bool = False, compression: bool = False
                     ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
     """Build the pure train step.
 
@@ -54,6 +61,13 @@ def make_train_step(model: Model, opt: adamw, *, grad_accum: int = 1,
     ``lax.scan`` — the standard compute/memory trade and, on real meshes,
     the loop XLA uses to overlap gradient collectives with the next
     microbatch's compute (latency hiding).
+
+    compression=True applies ``repro.dist.compression``'s error-feedback
+    int8 pass to the gradients before the optimizer update; the residual
+    pytree rides in ``state["grad_err"]`` (see ``init_state``), so the
+    dropped quantization error is re-injected next step and the
+    accumulated update stays unbiased while the gradient all-reduce
+    payload shrinks 4×.
     """
 
     def loss_fn(params, batch):
@@ -82,10 +96,16 @@ def make_train_step(model: Model, opt: adamw, *, grad_accum: int = 1,
             grads = jax.tree.map(lambda g: g / grad_accum, grads)
             loss = loss / grad_accum
             metrics = {}
+        new_err = None
+        if compression:
+            from repro.dist.compression import compress_gradients
+            grads, new_err = compress_gradients(grads, state["grad_err"])
         new_params, new_opt, opt_metrics = opt.update(grads, state["opt"],
                                                       params)
         new_state = {"params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}
+        if new_err is not None:
+            new_state["grad_err"] = new_err
         return new_state, {"loss": loss, **opt_metrics}
 
     return train_step
@@ -104,7 +124,8 @@ class Trainer:
         self.straggler = StragglerMonitor()
         self.history: list[Dict] = []
         step_fn = make_train_step(model, self.opt,
-                                  grad_accum=cfg.grad_accum, remat=cfg.remat)
+                                  grad_accum=cfg.grad_accum, remat=cfg.remat,
+                                  compression=cfg.grad_compression)
         self.step_fn = jax.jit(step_fn, donate_argnums=(0,)) if jit else step_fn
         rng = jax.random.PRNGKey(0) if rng is None else rng
         self._rng = rng
@@ -117,8 +138,16 @@ class Trainer:
             if latest is not None:
                 log.info("auto-resume from step %d", latest)
                 _, state = ckpt.restore(self.cfg.ckpt_dir, latest)
+                if self.cfg.grad_compression and "grad_err" not in state:
+                    # checkpoint predates compression: fresh zero residuals
+                    state["grad_err"] = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32),
+                        state["params"])
+                elif not self.cfg.grad_compression:
+                    state.pop("grad_err", None)
                 return state
-        return init_state(self.model, rng, self.opt)
+        return init_state(self.model, rng, self.opt,
+                          compression=self.cfg.grad_compression)
 
     @property
     def step(self) -> int:

@@ -67,9 +67,6 @@ def test_sharded_train_step_matches_single_device():
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(reason="repro.dist.pipeline not implemented yet — the "
-                   "pipeline-parallel subsystem lands in a later PR",
-                   raises=AssertionError, strict=True)
 def test_pipeline_parallel_matches_sequential():
     _run("""
         from repro.dist.pipeline import pipeline_apply
@@ -91,13 +88,11 @@ def test_pipeline_parallel_matches_sequential():
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(reason="repro.dist.compression not implemented yet — "
-                   "int8 compressed collectives land in a later PR",
-                   raises=AssertionError, strict=True)
 def test_compressed_psum_error_bounded():
     _run("""
         from functools import partial
         from jax.sharding import PartitionSpec as P
+        from repro.dist import shard_map
         from repro.dist.compression import (compressed_psum_mean,
                                             uncompressed_psum_mean)
         mesh = jax.make_mesh((2, 4), ("pod", "data"))
@@ -109,10 +104,10 @@ def test_compressed_psum_error_bounded():
             exact = uncompressed_psum_mean(g)
             return mean, exact, e2
 
-        fn = jax.shard_map(body, mesh=mesh,
-                           in_specs=(P(("pod", "data")), P()),
-                           out_specs=(P(("pod", "data")), P(("pod", "data")), P()),
-                           check_vma=False)
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(P(("pod", "data")), P()),
+                       out_specs=(P(("pod", "data")), P(("pod", "data")), P()),
+                       check_vma=False)
         mean, exact, e2 = fn(g, err0)
         rel = float(jnp.max(jnp.abs(mean - exact)) / jnp.max(jnp.abs(exact)))
         assert rel < 0.05, f"int8 hop error too large: {rel}"
@@ -138,9 +133,6 @@ def test_dryrun_cell_on_test_mesh():
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(reason="repro.dist.elastic not implemented yet — "
-                   "elastic checkpoint restore lands in a later PR",
-                   raises=AssertionError, strict=True)
 def test_elastic_restore_across_meshes(tmp_path):
     """Checkpoint under an 8-device mesh, restore onto a 4-device mesh."""
     _run(f"""
@@ -181,4 +173,36 @@ def test_multipod_mesh_axes():
         mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         assert data_axes(mesh) == ("pod", "data")
         print("OK", mesh.shape)
+    """)
+
+
+@pytest.mark.slow
+def test_dist_backend_multi_device_parity():
+    """The "dist" pipeline backend decodes the same greedy stream as the
+    single-executable "model" backend when the layers really are spread
+    across a multi-device ("stage",) mesh."""
+    _run("""
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+        from repro.serving import InferenceSession, ServeRequest, create_backend
+        from repro.serving.backends import get_backend
+        from repro.serving.backends.dist import DistBackend
+
+        assert get_backend("dist") is DistBackend
+        cfg = get_smoke_config("qwen2-1.5b", layers=4, d_model=64, heads=4,
+                               d_ff=128, vocab=256)
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        prompt = np.array([[11, 23, 37, 41]], np.int32)
+        streams = {}
+        for mode in ("model", "dist"):
+            backend = create_backend(mode, model, params, batch=1, max_len=16)
+            r = InferenceSession(backend).run(
+                ServeRequest(prompt=prompt, max_new_tokens=6))
+            streams[mode] = r.tokens
+        b = create_backend("dist", model, params, batch=1, max_len=16)
+        assert b.stages == 4  # one layer per stage on the 8-device host
+        assert b.pipeline_stats().row()["bubble_pct"] == 75.0
+        np.testing.assert_array_equal(streams["model"], streams["dist"])
+        print("OK dist backend parity on", len(jax.devices()), "devices")
     """)
