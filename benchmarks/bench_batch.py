@@ -1,4 +1,5 @@
-"""Beyond-paper: batch>1 validation of the crossover model (App. F).
+"""Beyond-paper: batch>1 validation of the crossover model (App. F), plus
+the continuous-batching amortization curve the CI bench gate asserts.
 
 The paper measured batch=1 only and flagged batch scaling as its
 "highest-priority future work": the B* model predicts per-operation
@@ -7,6 +8,14 @@ scale super-linearly in the overhead-bound regime and saturate once
 compute-bound.  We sweep batch at fixed fusion level and compare the
 measured aggregate-token throughput curve against the overhead-amortization
 prediction  t(B) ≈ t_overhead + B·t_compute(1).
+
+``run_serving`` measures the SERVING-side amortizer: N overlapping
+requests through the continuous slot ``Scheduler`` (one batched decode
+dispatch stream per cycle) against the same N requests decoded
+sequentially — aggregate tok/s vs. concurrent requests and
+dispatches/token vs. occupancy, emitted as ``BENCH_serving.json``.  The
+CI ``bench`` job fails if 4-slot continuous throughput drops below the
+1-slot sequential baseline (``--gate 1.0``).
 """
 from __future__ import annotations
 
@@ -18,9 +27,12 @@ import numpy as np
 from benchmarks.common import print_table, save_results
 from repro.configs.bench import BENCH_05B
 from repro.models import build_model
-from repro.serving import InferenceSession, create_backend
+from repro.serving import (InferenceSession, Scheduler, ServeRequest,
+                           create_backend)
 
 BATCHES = (1, 2, 4, 8)
+SLOT_SWEEP = (1, 2, 4, 8)
+GATE_SLOTS = 4       # the CI gate compares this occupancy vs 1-slot seq
 
 
 def run(quick: bool = False, tokens: int = 20) -> List[Dict]:
@@ -62,8 +74,122 @@ def run(quick: bool = False, tokens: int = 20) -> List[Dict]:
                        "step_slowdown_vs_b1", "cv_pct"])
     print(f"  → {verdict}")
     save_results("batch", {"rows": rows, "verdict": verdict})
+    run_serving(quick=quick)
     return rows
 
 
+# ---------------------------------------------------------------------------
+# continuous-batching amortization curve (BENCH_serving.json + CI gate)
+# ---------------------------------------------------------------------------
+
+def _schedule(session, prompts, tokens: int, num_slots: int,
+              continuous: bool):
+    """One scheduler pass over ``prompts``; returns (results, stats)."""
+    sched = Scheduler(session, num_slots=num_slots, continuous=continuous)
+    ids = [sched.submit(ServeRequest(prompt=p, max_new_tokens=tokens,
+                                     request_id=f"s{num_slots}-r{i}"))
+           for i, p in enumerate(prompts)]
+    results = sched.run()
+    return [results[rid] for rid in ids], sched.last_stats
+
+
+def run_serving(quick: bool = False, tokens: int = 16,
+                modes=("F3", "model"), gate: float = 0.0) -> Dict:
+    """tok/s vs. concurrent requests, dispatches/token vs. occupancy.
+
+    For each slot count S the same S overlapping requests run twice: the
+    continuous scheduler (one batched decode dispatch stream per cycle)
+    and the 1-slot sequential baseline (S back-to-back runs).  The
+    speedup ratio at each S is the serving amortization curve; ``gate``
+    > 0 asserts the S=4 continuous/sequential ratio on the dispatch-bound
+    F3 regime (the CI continuous-batching smoke gate) and exits nonzero
+    below it.
+    """
+    if quick:
+        tokens = 6
+    sweep = tuple(s for s in SLOT_SWEEP if s <= GATE_SLOTS) if quick \
+        else SLOT_SWEEP
+    model = build_model(BENCH_05B)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    plen = 5
+    max_len = plen + tokens + 4
+
+    rows: List[Dict] = []
+    gate_ratios: Dict[str, float] = {}
+    for mode in modes:
+        backend = create_backend(mode, model, params, batch=1,
+                                 max_len=max_len)
+        session = InferenceSession(backend)
+        prompts = [rng.integers(0, BENCH_05B.vocab_size, size=(1, plen))
+                   .astype(np.int32) for _ in range(max(sweep))]
+        # independent greedy references (also compiles the sequential path,
+        # so the timed passes below exclude XLA compilation)
+        refs = [session.run(ServeRequest(prompt=p, max_new_tokens=tokens))
+                .tokens for p in prompts]
+        for s in sweep:
+            # warmup: each slot count lowers its own batched decode graph
+            _schedule(session, prompts[:s], tokens, s, True)
+            res_c, st_c = _schedule(session, prompts[:s], tokens, s, True)
+            res_q, st_q = _schedule(session, prompts[:s], tokens, 1, False)
+            for r, ref in zip(res_c, refs[:s]):
+                np.testing.assert_array_equal(r.tokens, ref)
+            for r, ref in zip(res_q, refs[:s]):
+                np.testing.assert_array_equal(r.tokens, ref)
+            ratio = (st_c.aggregate_tok_per_s
+                     / max(st_q.aggregate_tok_per_s, 1e-12))
+            if mode == modes[0] and s == GATE_SLOTS:
+                gate_ratios[mode] = ratio
+            rows.append({
+                "mode": mode,
+                "concurrent": s,
+                "tok_s_continuous": round(st_c.aggregate_tok_per_s, 2),
+                "tok_s_sequential": round(st_q.aggregate_tok_per_s, 2),
+                "speedup": round(ratio, 2),
+                "disp_per_tok_continuous": round(
+                    st_c.dispatches_per_token, 2),
+                "disp_per_tok_sequential": round(
+                    st_q.dispatches_per_token, 2),
+                "mean_occupancy": round(st_c.mean_occupancy, 2),
+            })
+    print_table("Continuous batching: amortization curve (bench-0.5b, "
+                "greedy parity asserted)",
+                rows, ["mode", "concurrent", "tok_s_continuous",
+                       "tok_s_sequential", "speedup",
+                       "disp_per_tok_continuous", "disp_per_tok_sequential",
+                       "mean_occupancy"])
+    payload = {
+        "rows": rows,
+        "gate_slots": GATE_SLOTS,
+        "gate_mode": modes[0],
+        "gate_ratio_measured": gate_ratios.get(modes[0]),
+        "gate_ratio_required": gate,
+        "parity": "exact",
+    }
+    save_results("serving", payload)
+    if gate > 0:
+        r = gate_ratios.get(modes[0], 0.0)
+        ok = r >= gate
+        print(f"  → bench gate [{modes[0]} @ {GATE_SLOTS} slots]: "
+              f"{r:.2f}× vs 1-slot sequential "
+              f"(required ≥ {gate:.2f}×) — {'PASS' if ok else 'FAIL'}")
+        if not ok:
+            raise SystemExit(
+                f"continuous-batching gate failed: {r:.2f} < {gate:.2f}")
+    return payload
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--serving-only", action="store_true",
+                    help="skip the App. F batch sweep")
+    ap.add_argument("--gate", type=float, default=0.0,
+                    help="fail unless 4-slot continuous tok/s ≥ GATE × "
+                         "1-slot sequential (CI regression gate)")
+    args = ap.parse_args()
+    if args.serving_only or args.gate > 0:
+        run_serving(quick=args.quick, gate=args.gate)
+    else:
+        run(quick=args.quick)

@@ -8,9 +8,14 @@ import time
 from typing import Any, Dict, List
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def save_results(name: str, payload: Any) -> str:
+    """Persist one benchmark's payload twice: a timestamped copy under
+    ``benchmarks/results/`` (local, gitignored) and the canonical
+    ``BENCH_<name>.json`` at the repo root — the committed trajectory CI
+    uploads as an artifact and gates regressions against."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"results_{name}.json")
     doc = {
@@ -21,6 +26,8 @@ def save_results(name: str, payload: Any) -> str:
         "data": payload,
     }
     with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=str)
+    with open(os.path.join(REPO_ROOT, f"BENCH_{name}.json"), "w") as f:
         json.dump(doc, f, indent=1, default=str)
     return path
 

@@ -1,8 +1,9 @@
 """Multi-request serving demo on the paper's benchmark protocol: the
 Qwen2.5-0.5B-structured bench model first benchmarked per backend
 (tok/s ± CI95 and TTFT like Table 2), then serving a QUEUE of requests
-through the slot ``Scheduler`` — each slot holds its own KV cache and
-decode steps interleave round-robin.
+through the continuous-batching slot ``Scheduler`` — each slot owns a row
+of the slot-major KV pool and every cycle advances ALL active slots in
+one batched decode dispatch stream.
 
     PYTHONPATH=src python examples/serve_qwen.py --requests 4 --tokens 25
 """
@@ -47,7 +48,7 @@ def main() -> None:
               f"phases={rep.dispatch_stats}")
 
     print(f"\nscheduler: {args.requests} queued requests on {args.slots} "
-          f"slots (backend=F3, token-level round-robin)\n")
+          f"slots (backend=F3, continuous batching)\n")
     backend = create_backend("F3", model, params, batch=1, max_len=max_len)
     sched = Scheduler(InferenceSession(backend), num_slots=args.slots)
     for r in range(args.requests):
@@ -58,8 +59,10 @@ def main() -> None:
     for rid in sorted(results):
         r = results[rid]
         print(f"{rid}: {r.n_new} tokens in {r.total_s:.2f}s "
-              f"(ttft {1e3 * r.ttft_s:.1f}ms, {r.finish_reason}) "
+              f"(ttft {1e3 * r.ttft_s:.1f}ms, queued "
+              f"{1e3 * r.queue_wait_s:.1f}ms, {r.finish_reason}) "
               f"first={r.tokens[0, :5]}")
+    print(f"\namortization: {sched.last_stats.row()}")
 
 
 if __name__ == "__main__":

@@ -4,11 +4,12 @@
 #   scripts/smoke.sh            # full tier-1 + parity smoke
 #   scripts/smoke.sh --fast     # parity smoke only
 #   scripts/smoke.sh --dist     # parity smoke + multi-device dist tests
+#   scripts/smoke.sh --serve    # parity smoke + continuous-scheduler smoke
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-if [[ "${1:-}" != "--fast" && "${1:-}" != "--dist" ]]; then
+if [[ "${1:-}" != "--fast" && "${1:-}" != "--dist" && "${1:-}" != "--serve" ]]; then
     echo "== tier-1 tests =="
     python -m pytest -x -q
 fi
@@ -16,6 +17,45 @@ fi
 if [[ "${1:-}" == "--dist" ]]; then
     echo "== repro.dist multi-device tests (subprocess, 8 forced devices) =="
     python -m pytest -x -q -m slow -k dist tests/
+fi
+
+if [[ "${1:-}" == "--serve" ]]; then
+    echo "== continuous scheduler smoke (4 overlapping requests, bench-0.5b) =="
+    python - <<'EOF'
+import jax
+import numpy as np
+
+from repro.configs.bench import BENCH_05B
+from repro.models import build_model
+from repro.serving import (InferenceSession, Scheduler, ServeRequest,
+                           create_backend)
+
+model = build_model(BENCH_05B)
+params = model.init_params(jax.random.PRNGKey(0))
+rng = np.random.default_rng(7)
+prompts = [rng.integers(0, BENCH_05B.vocab_size, size=(1, n)).astype(np.int32)
+           for n in (4, 6, 5, 3)]
+
+backend = create_backend("model", model, params, batch=1, max_len=24)
+session = InferenceSession(backend)
+# 4 independent references through the plain session API
+refs = [session.run(ServeRequest(prompt=p, max_new_tokens=8)).tokens
+        for p in prompts]
+
+# the same 4 requests, overlapping, through the continuous scheduler
+sched = Scheduler(session, num_slots=4, continuous=True)
+ids = [sched.submit(ServeRequest(prompt=p, max_new_tokens=8,
+                                 request_id=f"r{i}"))
+       for i, p in enumerate(prompts)]
+results = sched.run()
+for i, rid in enumerate(ids):
+    np.testing.assert_array_equal(results[rid].tokens, refs[i])
+st = sched.last_stats
+print(f"  stats={st.row()}")
+assert st.mean_occupancy > 1.0, "requests never overlapped"
+assert st.dispatches_per_token < 1.0, "batched decode did not amortize"
+print("OK: 4 overlapping requests match 4 independent runs exactly")
+EOF
 fi
 
 echo "== 2-backend parity smoke (session API, bench-0.5b) =="

@@ -124,11 +124,19 @@ def _emit_moe_ffn(g: GraphBuilder, cfg: ModelConfig, x: Ref,
 
 def build_decode_graph(params: Dict[str, Any], cfg: ModelConfig, *,
                        batch: int, max_len: int,
-                       fusion: FusionSpec = FusionSpec()) -> OpGraph:
+                       fusion: FusionSpec = FusionSpec(),
+                       slot_pos: bool = False) -> OpGraph:
     """One autoregressive decode step as an explicit dispatch stream.
 
     Inputs:  tokens (B,1) int32, pos () int32, k_cache/v_cache per layer.
     Outputs: next_token (B,1) int32 (device-side argmax), updated caches.
+
+    ``slot_pos=True`` builds the continuous-batching variant: ``pos`` is a
+    (B,) vector — every row (scheduler slot) decodes at its own sequence
+    offset — so the cache write becomes a per-row scatter and the rotary
+    tables are gathered per row.  Dispatch count is IDENTICAL to the
+    uniform-position graph; only the op operand ranks change, which is what
+    lets one cycle amortize the whole dispatch stream over B slots.
     """
     hd = cfg.resolved_head_dim
     nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
@@ -136,7 +144,7 @@ def build_decode_graph(params: Dict[str, Any], cfg: ModelConfig, *,
     g = GraphBuilder()
 
     tokens = g.input("tokens", (batch, 1), jnp.int32)
-    pos = g.input("pos", (), jnp.int32)
+    pos = g.input("pos", (batch,) if slot_pos else (), jnp.int32)
     caches = []
     for i in range(cfg.num_layers):
         caches.append((
@@ -199,12 +207,19 @@ def build_decode_graph(params: Dict[str, Any], cfg: ModelConfig, *,
         if i == 0:
             cos = g.op("gather_rows", cos_t, pos, tag="rope_cos")
             sin = g.op("gather_rows", sin_t, pos, tag="rope_sin")
+            if slot_pos:
+                # (B, hd) per-row tables → broadcastable against (B,1,H,hd)
+                cos = g.op("reshape", cos, shape=(batch, 1, 1, hd),
+                           tag="rope_cos")
+                sin = g.op("reshape", sin, shape=(batch, 1, 1, hd),
+                           tag="rope_sin")
         q = _emit_rope(g, q, cos, sin, f"{t}/rope_q")
         k = _emit_rope(g, k, cos, sin, f"{t}/rope_k")
         k = g.op("cast", k, dtype=cfg.dtype, tag=t)
         kc, vc = caches[i]
-        kc = g.op("cache_update", kc, k, pos, donate=(0,), tag=f"{t}/k_cache")
-        vc = g.op("cache_update", vc, v, pos, donate=(0,), tag=f"{t}/v_cache")
+        upd = "cache_update_rows" if slot_pos else "cache_update"
+        kc = g.op(upd, kc, k, pos, donate=(0,), tag=f"{t}/k_cache")
+        vc = g.op(upd, vc, v, pos, donate=(0,), tag=f"{t}/v_cache")
         g.output(f"k_cache_{i}", kc)
         g.output(f"v_cache_{i}", vc)
         o = g.op("sdpa", q, kc, vc, length, tag=f"{t}/sdpa")
@@ -237,7 +252,7 @@ def build_decode_graph(params: Dict[str, Any], cfg: ModelConfig, *,
     g.output("next_token", nxt)
     g.output("logits", logits)
     return g.build(kind="decode", arch=cfg.name, fusion=fusion.level,
-                   batch=batch, max_len=max_len)
+                   batch=batch, max_len=max_len, slot_pos=slot_pos)
 
 
 def build_prefill_graph(params: Dict[str, Any], cfg: ModelConfig, *,

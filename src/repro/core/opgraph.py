@@ -120,6 +120,10 @@ OPS: Dict[str, Callable] = {
     "cast": lambda x, *, dtype: x.astype(dtype),
     "cache_update": lambda cache, val, pos: jax.lax.dynamic_update_slice(
         cache, val, (0, pos, 0, 0)),
+    # per-row scatter for slot-position decode graphs (continuous batching):
+    # row b writes at its own position pos[b] instead of a shared offset
+    "cache_update_rows": lambda cache, val, pos: cache.at[
+        jnp.arange(cache.shape[0]), pos].set(val[:, 0].astype(cache.dtype)),
     "sdpa": _sdpa,
     "sdpa_prefill": _sdpa_prefill,
     # --- fused ops (Table 5 / §6.1) ------------------------------------
@@ -153,6 +157,7 @@ TAXONOMY: Dict[str, str] = {
     "pow": "rmsnorm_comp", "mean": "rmsnorm_comp", "rsqrt": "rmsnorm_comp",
     "fused_rmsnorm": "rmsnorm_comp",
     "concat": "concat", "cache_update": "concat",
+    "cache_update_rows": "concat",
 }
 _OTHER = "other"
 

@@ -7,6 +7,12 @@
 Every mode routes through the same backend protocol, so each row carries
 the uniform dispatch accounting (dispatches/step + the Table-20-style
 arg-prep / enqueue / sync phase split).
+
+Continuous batching: ``--num-slots N`` additionally drives each mode
+through the slot ``Scheduler`` with ``--requests`` overlapping requests
+(default 2×N), one batched decode dispatch per cycle; ``--no-continuous``
+runs the same workload on the per-slot sequential baseline instead, so the
+two rows side by side show the dispatch-amortization the scheduler buys.
 """
 from __future__ import annotations
 
@@ -32,14 +38,23 @@ def main() -> None:
                     choices=["greedy", "temperature", "topk"])
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--num-slots", type=int, default=0,
+                    help="also run the slot scheduler with N slots")
+    ap.add_argument("--continuous", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="batched decode cycles (--no-continuous: one "
+                         "decode dispatch per slot per cycle)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="overlapping requests to schedule (default 2×slots)")
     ap.add_argument("--out", default=None, help="write JSON rows here")
     args = ap.parse_args()
 
     from repro.configs import REGISTRY, get_smoke_config
     from repro.configs.bench import BENCH_MODELS
     from repro.models import build_model
-    from repro.serving import (InferenceSession, SamplerConfig,
-                               available_backends, create_backend)
+    from repro.serving import (InferenceSession, SamplerConfig, Scheduler,
+                               ServeRequest, available_backends,
+                               create_backend)
 
     if args.model in BENCH_MODELS:
         cfg = BENCH_MODELS[args.model]
@@ -70,6 +85,20 @@ def main() -> None:
                                 readback=args.readback)
         row = rep.row()
         print(f"[serve] {row}")
+        if args.num_slots > 0:
+            n_req = args.requests or 2 * args.num_slots
+            sched = Scheduler(session, num_slots=args.num_slots,
+                              continuous=args.continuous)
+            for i in range(n_req):
+                p = rng.integers(0, cfg.vocab_size,
+                                 size=(1, args.prompt_len)).astype(np.int32)
+                sched.submit(ServeRequest(prompt=p,
+                                          max_new_tokens=args.tokens,
+                                          sampler=sampler,
+                                          readback=args.readback))
+            sched.run()
+            row["scheduler"] = sched.last_stats.row()
+            print(f"[sched] {row['scheduler']}")
         rows.append(row)
     if args.out:
         with open(args.out, "w") as f:

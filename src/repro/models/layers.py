@@ -225,10 +225,13 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale  # (B,KV,G,max)
     kpos = jnp.arange(k_cache.shape[1])
+    # length may be scalar (uniform decode) or (B,) per-row — the
+    # continuous-batching regime where every slot sits at its own position
     valid = kpos[None, :] < length if jnp.ndim(length) == 0 else kpos[None, :] < length[:, None]
     if window is not None:
-        lo = (length if jnp.ndim(length) else length) - window
-        valid = valid & (kpos[None, :] >= lo)
+        lo = length - window
+        valid = valid & (kpos[None, :] >= (lo if jnp.ndim(lo) == 0
+                                           else lo[:, None]))
     s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,

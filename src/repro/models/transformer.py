@@ -315,3 +315,51 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Params,
         scan_body, x, (params["blocks"], cache["k"], cache["v"]))
     logits = unembed(params, cfg, x)
     return {"k": kcache, "v": vcache, "pos": pos + 1}, logits
+
+
+def decode_block_rows(p: Params, cfg: ModelConfig, x: jax.Array,
+                      kc: jax.Array, vc: jax.Array, pos: jax.Array,
+                      ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One layer of the PER-ROW-position decode path → (x', (kc', vc')).
+
+    Identical math to :func:`decode_block`, except every batch row carries
+    its own cache position ``pos (B,)`` — the continuous-batching regime
+    where each scheduler slot sits at a different sequence offset.  The KV
+    write is a per-row scatter instead of a shared dynamic slice, and the
+    attention mask is per-row (``decode_attention`` takes vector lengths).
+    """
+    b = x.shape[0]
+    positions = pos[:, None]                         # (B, 1)
+    xn = L.rmsnorm(x, p["attn_norm"], cfg.rms_eps)
+    q, k, v = _project_qkv(p["attn"], cfg, xn)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    rows = jnp.arange(b)
+    kc = kc.at[rows, pos].set(k[:, 0].astype(kc.dtype))
+    vc = vc.at[rows, pos].set(v[:, 0].astype(vc.dtype))
+    o = L.decode_attention(q, kc, vc, pos + 1, window=cfg.sliding_window)
+    x = x + L.linear(o.reshape(b, 1, -1), p["attn"]["wo"])
+    f, _ = ffn_block(p["ffn"], cfg, L.rmsnorm(x, p["ffn_norm"], cfg.rms_eps))
+    return x + f, (kc, vc)
+
+
+def decode_step_rows(params: Params, cfg: ModelConfig, cache: Params,
+                     tokens: jax.Array) -> Tuple[Params, jax.Array]:
+    """One batched decode step with per-row positions (continuous batching).
+
+    ``cache["pos"]`` is (B,) int32 — each row its own valid length.  One
+    call decodes every scheduler slot in ONE dispatch, so the per-step
+    dispatch overhead the paper measures is paid once per cycle instead of
+    once per request.  tokens (B, 1) → (cache', logits (B, 1, V)).
+    """
+    x = params["embed"][tokens]
+    pos = cache["pos"]
+
+    def scan_body(carry, scan_in):
+        p, kc, vc = scan_in
+        return decode_block_rows(p, cfg, carry, kc, vc, pos)
+
+    x, (kcache, vcache) = jax.lax.scan(
+        scan_body, x, (params["blocks"], cache["k"], cache["v"]))
+    logits = unembed(params, cfg, x)
+    return {"k": kcache, "v": vcache, "pos": pos + 1}, logits

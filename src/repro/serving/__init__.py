@@ -5,14 +5,16 @@ from repro.serving.backends import (BackendCapabilities, DispatchStats,
                                     available_backends, create_backend,
                                     get_backend, register_backend)
 from repro.serving.engine import GenerationEngine, GenerationResult
+from repro.serving.kvcache import SlotKVCache
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.session import (BenchmarkReport, InferenceSession,
-                                   Scheduler, ServeRequest, ServeResult)
+                                   Scheduler, SchedulerStats, ServeRequest,
+                                   ServeResult)
 
 __all__ = [
     "BackendCapabilities", "DispatchStats", "ExecutionBackend", "StepOutput",
     "available_backends", "create_backend", "get_backend", "register_backend",
     "GenerationEngine", "GenerationResult", "SamplerConfig", "sample",
-    "BenchmarkReport", "InferenceSession", "Scheduler", "ServeRequest",
-    "ServeResult",
+    "BenchmarkReport", "InferenceSession", "Scheduler", "SchedulerStats",
+    "ServeRequest", "ServeResult", "SlotKVCache",
 ]

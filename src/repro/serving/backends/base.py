@@ -23,13 +23,16 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import (Any, Callable, Dict, NamedTuple, Optional, Sequence,
+                    Tuple)
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.engine import RunStats
 
 State = Dict[str, Any]
+BatchState = Dict[str, Any]     # opaque slot-pool state (continuous batching)
 
 
 class StepOutput(NamedTuple):
@@ -52,6 +55,9 @@ class BackendCapabilities:
     device_argmax: bool = True      # StepOutput.next_token is populated
     on_device_loop: bool = False    # generate_ondevice() is available
     phase_timeline: bool = False    # dispatch_stats() has real phase splits
+    decode_batch: bool = False      # TRUE batched decode_batch (one dispatch
+                                    # stream per cycle for ALL slots); False
+                                    # ⇒ the per-slot-loop fallback runs
 
 
 @dataclasses.dataclass
@@ -123,6 +129,67 @@ class ExecutionBackend(abc.ABC):
         Only for backends with ``capabilities.on_device_loop``."""
         raise NotImplementedError(
             f"{self.capabilities.name!r} has no on-device generation loop")
+
+    # -- continuous batching (slot pool) -----------------------------------
+    # The scheduler drives these four.  ``bstate`` is an opaque batched
+    # container; per-request prefill states are admitted into numbered
+    # slots and one ``decode_batch`` call advances EVERY active slot.
+    # Backends with ``capabilities.decode_batch`` run the whole cycle as
+    # one batched dispatch stream (slot-major KV, per-row positions); the
+    # default implementation below is the per-slot-loop fallback — same
+    # contract, no amortization — for backends that cannot batch (e.g. the
+    # pipeline-parallel ``dist`` backend).
+
+    def alloc_slots(self, num_slots: int) -> BatchState:
+        """A fresh batched decode state with ``num_slots`` empty slots."""
+        return {"num_slots": num_slots, "slots": {}}
+
+    def admit_slot(self, bstate: BatchState, slot: int, state: State
+                   ) -> BatchState:
+        """Move one prefilled request state into ``slot``."""
+        if slot in bstate["slots"]:
+            raise RuntimeError(f"slot {slot} already occupied")
+        bstate["slots"][slot] = state
+        return bstate
+
+    def release_slot(self, bstate: BatchState, slot: int) -> BatchState:
+        """Free ``slot`` (request finished or evicted)."""
+        bstate["slots"].pop(slot, None)
+        return bstate
+
+    def decode_batch(self, bstate: BatchState, tokens, slots: Sequence[int]
+                     ) -> Tuple[BatchState, StepOutput]:
+        """One decode cycle for every slot in ``slots``.
+
+        ``tokens`` is (num_slots, 1) int32, row s = slot s's last token
+        (free rows are don't-care).  Returns a slot-indexed ``StepOutput``
+        — row s of ``logits``/``next_token`` belongs to slot s.  Fallback:
+        one ``decode_step`` dispatch per active slot; free rows are zeros.
+        """
+        n = bstate["num_slots"]
+        tokens = jnp.asarray(tokens, jnp.int32)
+        rows_logits: Dict[int, jax.Array] = {}
+        rows_next: Dict[int, Any] = {}
+        for s in slots:
+            st, out = self.decode_step(bstate["slots"][s], tokens[s:s + 1])
+            bstate["slots"][s] = st
+            rows_logits[s] = out.logits
+            rows_next[s] = out.next_token
+        # free rows are zero-padded so the output stays slot-indexed like
+        # the true batched implementations; the pad/concat cost is noise
+        # next to the per-slot full decode dispatches this fallback pays
+        any_row = next(iter(rows_logits.values()))
+        zero_l = jnp.zeros_like(any_row)
+        logits = jnp.concatenate(
+            [rows_logits.get(s, zero_l) for s in range(n)], axis=0)
+        if all(rows_next[s] is not None for s in slots):
+            any_n = next(iter(rows_next.values()))
+            zero_n = jnp.zeros_like(any_n)
+            nxt = jnp.concatenate(
+                [rows_next.get(s, zero_n) for s in range(n)], axis=0)
+        else:
+            nxt = None
+        return bstate, StepOutput(logits, nxt)
 
     # -- uniform instrumentation ------------------------------------------
     def __init__(self) -> None:

@@ -90,8 +90,14 @@ class DistBackend(ExecutionBackend):
 
         self._jit_prefill = jax.jit(self._sharded_prefill)
         self._jit_decode = jax.jit(self._sharded_decode)
+        # decode_batch=False: the pipeline schedule is compiled around a
+        # SINGLE shared scalar position (every stage's dynamic_update_slice
+        # indexes the same tick), so per-slot positions cannot batch here —
+        # the scheduler's per-slot-loop fallback runs instead (one pipeline
+        # pass per active slot per cycle), advertised via capabilities.
         self.capabilities = BackendCapabilities(
-            name=mode, dispatches_per_token=1, device_argmax=True)
+            name=mode, dispatches_per_token=1, device_argmax=True,
+            decode_batch=False)
 
     # ------------------------------------------------------------------
     def pipeline_stats(self) -> PipelineStats:

@@ -6,18 +6,27 @@ ONE executable (``FullGraphEngine``, the §9.2 CUDA-Graphs analogue).
 Numerics are identical across all six — only dispatch granularity changes,
 which is exactly the controlled experiment the protocol exposes through
 ``dispatch_stats()``.
+
+Continuous batching: ``decode_batch`` runs a ``slot_pos=True`` decode
+graph (per-row positions, per-row cache scatter) over a slot-major
+``SlotKVCache``.  The batched graph has the SAME dispatch count as the
+single-request graph, so one cycle's dispatch stream amortizes over every
+active slot — the structural escape from the paper's ~95 µs/op batch-1
+overhead wall.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 import jax.numpy as jnp
 
 from repro.core.engine import DispatchEngine, FullGraphEngine
 from repro.core.graphs import LEVELS, build_decode_graph, build_prefill_graph
 from repro.serving import kvcache as kv
-from repro.serving.backends.base import (BackendCapabilities, ExecutionBackend,
-                                         State, StepOutput, register_backend)
+from repro.serving.kvcache import SlotKVCache
+from repro.serving.backends.base import (BackendCapabilities, BatchState,
+                                         ExecutionBackend, State, StepOutput,
+                                         register_backend)
 
 GRAPH_MODES = tuple(LEVELS) + ("FULL",)
 
@@ -43,11 +52,13 @@ class GraphBackend(ExecutionBackend):
         self._decode_engine = (FullGraphEngine(graph) if self._full
                                else DispatchEngine(graph))
         self._prefill_engines: Dict[int, Any] = {}
+        self._batched_engines: Dict[int, Any] = {}   # num_slots → engine
         self.capabilities = BackendCapabilities(
             name=mode,
             dispatches_per_token=1 if self._full else graph.num_dispatches(),
             device_argmax=True,
             phase_timeline=True,
+            decode_batch=self.cfg.family in ("dense", "moe"),
         )
 
     # ------------------------------------------------------------------
@@ -89,3 +100,56 @@ class GraphBackend(ExecutionBackend):
             cache[f"v_cache_{l}"] = out[f"v_cache_{l}"]
         new_state: State = {"cache": cache, "pos": state["pos"] + 1}
         return new_state, StepOutput(out["logits"], out["next_token"])
+
+    # -- continuous batching -------------------------------------------
+    def _batched_engine(self, num_slots: int):
+        eng = self._batched_engines.get(num_slots)
+        if eng is None:
+            graph = build_decode_graph(self.params, self.cfg,
+                                       batch=num_slots, max_len=self.max_len,
+                                       fusion=self._fusion, slot_pos=True)
+            eng = (FullGraphEngine(graph) if self._full
+                   else DispatchEngine(graph))
+            self._batched_engines[num_slots] = eng
+        return eng
+
+    def alloc_slots(self, num_slots: int) -> BatchState:
+        if not self.capabilities.decode_batch:
+            return super().alloc_slots(num_slots)
+        self._batched_engine(num_slots)    # build/compile the cycle graph
+        return {"num_slots": num_slots,
+                "kv": SlotKVCache.for_graph(self.cfg, num_slots,
+                                            self.max_len)}
+
+    def admit_slot(self, bstate: BatchState, slot: int, state: State
+                   ) -> BatchState:
+        if "kv" not in bstate:
+            return super().admit_slot(bstate, slot, state)
+        kvp: SlotKVCache = bstate["kv"]
+        kvp.allocate(slot)
+        kvp.write(slot, state["cache"], int(state["pos"]))
+        return bstate
+
+    def release_slot(self, bstate: BatchState, slot: int) -> BatchState:
+        if "kv" not in bstate:
+            return super().release_slot(bstate, slot)
+        bstate["kv"].free(slot)
+        return bstate
+
+    def decode_batch(self, bstate: BatchState, tokens,
+                     slots: Sequence[int]) -> Tuple[BatchState, StepOutput]:
+        """One dispatch STREAM (F-levels) or ONE dispatch (FULL) per cycle,
+        shared by every active slot via per-row graph positions."""
+        if "kv" not in bstate:
+            return super().decode_batch(bstate, tokens, slots)
+        kvp: SlotKVCache = bstate["kv"]
+        eng = self._batched_engine(bstate["num_slots"])
+        inputs = dict(kvp.tree)
+        inputs["tokens"] = jnp.asarray(tokens, jnp.int32)
+        inputs["pos"] = jnp.asarray(kvp.pos)
+        out, rs = eng.run(inputs, record_timeline=True)
+        self._record(rs)
+        kvp.tree = {f"{c}_cache_{l}": out[f"{c}_cache_{l}"]
+                    for l in range(self.cfg.num_layers) for c in ("k", "v")}
+        kvp.advance(slots)
+        return bstate, StepOutput(out["logits"], out["next_token"])

@@ -5,18 +5,26 @@ to a single XLA dispatch — the regime the paper's §9.2 asks WebGPU
 runtimes to reach.  The device-side argmax is computed inside the same
 executable, so the greedy path reads back one int32 per token (App. H
 "token readback").
+
+Continuous batching: ``decode_batch`` runs ``transformer.decode_step_rows``
+over a slot-major ``SlotKVCache`` — every scheduler slot advances in the
+SAME single dispatch, at its own per-row cache position, so per-cycle
+dispatch overhead is paid once regardless of occupancy.
 """
 from __future__ import annotations
 
 import time
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.engine import RunStats
-from repro.serving.backends.base import (BackendCapabilities, ExecutionBackend,
-                                         State, StepOutput, register_backend)
+from repro.models import transformer
+from repro.serving.kvcache import SlotKVCache
+from repro.serving.backends.base import (BackendCapabilities, BatchState,
+                                         ExecutionBackend, State, StepOutput,
+                                         register_backend)
 
 
 @register_backend("model")
@@ -40,10 +48,18 @@ class ModelBackend(ExecutionBackend):
             cache, logits = model.decode_step(p, cache, t)
             return cache, logits, jnp.argmax(logits, -1).astype(jnp.int32)
 
+        def _decode_rows(p, k, v, pos, t):
+            cache = {"k": k, "v": v, "pos": pos}
+            cache, logits = transformer.decode_step_rows(p, self.cfg, cache, t)
+            return (cache["k"], cache["v"], logits,
+                    jnp.argmax(logits, -1).astype(jnp.int32))
+
         self._jit_prefill = jax.jit(_prefill)
         self._jit_decode = jax.jit(_decode)
+        self._jit_decode_rows = jax.jit(_decode_rows, donate_argnums=(1, 2))
         self.capabilities = BackendCapabilities(
-            name=mode, dispatches_per_token=1, device_argmax=True)
+            name=mode, dispatches_per_token=1, device_argmax=True,
+            decode_batch=self.cfg.family in ("dense", "moe"))
 
     # ------------------------------------------------------------------
     def _run(self, fn, *args) -> Tuple[object, StepOutput]:
@@ -63,3 +79,45 @@ class ModelBackend(ExecutionBackend):
         cache, out = self._run(self._jit_decode, self.params, state["cache"],
                                jnp.asarray(tok, jnp.int32))
         return {"cache": cache}, out
+
+    # -- continuous batching -------------------------------------------
+    def alloc_slots(self, num_slots: int) -> BatchState:
+        if not self.capabilities.decode_batch:
+            return super().alloc_slots(num_slots)
+        return {"num_slots": num_slots,
+                "kv": SlotKVCache.for_model(self.cfg, num_slots,
+                                            self.max_len)}
+
+    def admit_slot(self, bstate: BatchState, slot: int, state: State
+                   ) -> BatchState:
+        if "kv" not in bstate:
+            return super().admit_slot(bstate, slot, state)
+        cache = state["cache"]
+        kv: SlotKVCache = bstate["kv"]
+        kv.allocate(slot)
+        kv.write(slot, {"k": cache["k"], "v": cache["v"]},
+                 int(cache["pos"]))
+        return bstate
+
+    def release_slot(self, bstate: BatchState, slot: int) -> BatchState:
+        if "kv" not in bstate:
+            return super().release_slot(bstate, slot)
+        bstate["kv"].free(slot)
+        return bstate
+
+    def decode_batch(self, bstate: BatchState, tokens,
+                     slots: Sequence[int]) -> Tuple[BatchState, StepOutput]:
+        """ONE dispatch advances every slot at its own cache position."""
+        if "kv" not in bstate:
+            return super().decode_batch(bstate, tokens, slots)
+        kv: SlotKVCache = bstate["kv"]
+        t0 = time.perf_counter()
+        k, v, logits, nxt = self._jit_decode_rows(
+            self.params, kv.tree["k"], kv.tree["v"],
+            jnp.asarray(kv.pos), jnp.asarray(tokens, jnp.int32))
+        enq = time.perf_counter() - t0
+        self._record(RunStats(wall_s=enq, dispatches=1, shape_ops=0,
+                              sync_mode="none", enqueue_s=enq))
+        kv.tree = {"k": k, "v": v}
+        kv.advance(slots)
+        return bstate, StepOutput(logits, nxt)

@@ -50,6 +50,7 @@ class OnDeviceBackend(ModelBackend):
             dispatches_per_token=0,  # amortized: 1 dispatch / whole sequence
             device_argmax=True,
             on_device_loop=True,
+            decode_batch=self.capabilities.decode_batch,  # inherited rows path
         )
 
     def generate_ondevice(self, state: State, first_tok, n_new: int,
