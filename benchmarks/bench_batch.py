@@ -179,6 +179,155 @@ def run_serving(quick: bool = False, tokens: int = 16,
     return payload
 
 
+# ---------------------------------------------------------------------------
+# prefix-reuse curve: radix cache hit rate, prefill dispatches saved, TTFT
+# (BENCH_paging.json + CI gate)
+# ---------------------------------------------------------------------------
+
+def run_prefix_reuse(quick: bool = False, gate: bool = False) -> Dict:
+    """N requests sharing a long system prompt through the paged scheduler.
+
+    Protocol: serve the same request sequence twice through one-slot paged
+    schedulers — once with the radix prefix cache OFF (every prompt pays
+    full prefill: the cold baseline) and once ON (request 1 cold, the rest
+    warm).  Greedy parity against the plain dense session is asserted for
+    every request.  Reported per run: prefix hit rate, prefill chunk
+    dispatches, TTFT, COW forks, and the dense-vs-paged KV memory table.
+
+    ``gate`` asserts the paper-level claims CI rides on: a warm hit
+    performs ZERO prefill dispatches for the shared span (warm chunks ==
+    suffix-only chunks) and warm TTFT ≤ cold TTFT.
+    """
+    n_req = 4 if quick else 8
+    tokens = 4 if quick else 8
+    sys_len = 28 if quick else 60       # NOT block-aligned → COW path runs
+    suffix_len = 6
+    block, chunk = 8, 8
+    plen = sys_len + suffix_len
+    max_len = plen + tokens + 4
+    model = build_model(BENCH_05B)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    system = rng.integers(0, BENCH_05B.vocab_size, size=sys_len)
+    prompts = [np.concatenate(
+        [system, rng.integers(0, BENCH_05B.vocab_size, size=suffix_len)]
+    ).astype(np.int32).reshape(1, -1) for _ in range(n_req)]
+
+    backend = create_backend("model", model, params, batch=1,
+                             max_len=max_len)
+    session = InferenceSession(backend)
+    refs = [session.run(ServeRequest(prompt=p, max_new_tokens=tokens))
+            .tokens for p in prompts]
+
+    def serve_all(prefix_cache: bool):
+        sched = Scheduler(session, num_slots=1, kv_layout="paged",
+                          prefill_chunk=chunk, block_size=block,
+                          prefix_cache=prefix_cache)
+        per_req = []
+        for i, p in enumerate(prompts):
+            rid = sched.submit(ServeRequest(prompt=p, max_new_tokens=tokens,
+                                            request_id=f"pc{prefix_cache}-{i}"))
+            res = sched.run()[rid]
+            np.testing.assert_array_equal(res.tokens, refs[i])
+            st = sched.last_stats
+            per_req.append({
+                "ttft_ms": 1e3 * res.ttft_s,
+                "prefill_chunks": st.prefill_chunks,
+                "hit_tokens": st.prefix_hit_tokens,
+                "cow_copies": st.cow_copies,
+            })
+        return per_req, sched.last_stats
+
+    # warmup: ONE request compiles the extend + decode executables
+    wsched = Scheduler(session, num_slots=1, kv_layout="paged",
+                       prefill_chunk=chunk, block_size=block,
+                       prefix_cache=False)
+    wsched.submit(ServeRequest(prompt=prompts[0], max_new_tokens=tokens))
+    wsched.run()
+    cold, _ = serve_all(prefix_cache=False)
+    warm_all, st_warm = serve_all(prefix_cache=True)
+    warm = warm_all[1:]                 # request 0 populates the cache
+
+    cold_chunks = -(-plen // chunk)
+    warm_chunks_expected = -(-(plen - sys_len) // chunk)
+    ttft_cold = float(np.mean([r["ttft_ms"] for r in cold]))
+    ttft_warm = float(np.mean([r["ttft_ms"] for r in warm]))
+    rows = [{
+        "mode": "cold (no prefix cache)",
+        "requests": len(cold),
+        "ttft_ms": round(ttft_cold, 2),
+        "prefill_chunks_per_req": cold[0]["prefill_chunks"],
+        "hit_tokens": 0,
+    }, {
+        "mode": "warm (radix hit)",
+        "requests": len(warm),
+        "ttft_ms": round(ttft_warm, 2),
+        "prefill_chunks_per_req": warm[0]["prefill_chunks"],
+        "hit_tokens": warm[0]["hit_tokens"],
+    }]
+    print_table("Prefix reuse: radix cache vs cold prefill (bench-0.5b, "
+                f"shared {sys_len}-token system prompt, parity asserted)",
+                rows, ["mode", "requests", "ttft_ms",
+                       "prefill_chunks_per_req", "hit_tokens"])
+    saved = cold_chunks - warm[0]["prefill_chunks"]
+    print(f"  → shared span {sys_len} tokens: {saved} prefill dispatches "
+          f"saved per warm request ({warm[0]['prefill_chunks']} vs "
+          f"{cold_chunks}), TTFT {ttft_cold:.1f} → {ttft_warm:.1f} ms")
+
+    # dense-vs-paged KV memory utilization, one table (bytes_allocated /
+    # bytes_live are now uniform across both layouts)
+    sched_d = Scheduler(session, num_slots=1)
+    for i, p in enumerate(prompts):
+        sched_d.submit(ServeRequest(prompt=p, max_new_tokens=tokens,
+                                    request_id=f"kvd{i}"))
+    sched_d.run()
+    st_dense = sched_d.last_stats
+    kv_rows = [
+        {"layout": lay, "kv_bytes_allocated": st.kv_bytes_allocated,
+         "kv_bytes_live_peak": st.kv_bytes_live_peak,
+         "utilization": round(st.kv_utilization, 3)}
+        for lay, st in (("dense", st_dense), ("paged", st_warm))]
+    print_table("KV memory utilization: dense rows vs paged blocks "
+                "(1 slot, same workload)", kv_rows,
+                ["layout", "kv_bytes_allocated", "kv_bytes_live_peak",
+                 "utilization"])
+    payload = {
+        "rows": rows,
+        "system_prompt_tokens": sys_len,
+        "prompt_tokens": plen,
+        "block_size": block,
+        "prefill_chunk": chunk,
+        "prefix_hit_tokens_warm": warm[0]["hit_tokens"],
+        "prefill_dispatches_saved_per_warm_req": saved,
+        "warm_chunks_expected_suffix_only": warm_chunks_expected,
+        "ttft_cold_ms": round(ttft_cold, 2),
+        "ttft_warm_ms": round(ttft_warm, 2),
+        "cow_copies_warm": sum(r["cow_copies"] for r in warm_all),
+        "kv_bytes_allocated": st_warm.kv_bytes_allocated,
+        "kv_bytes_live_peak": st_warm.kv_bytes_live_peak,
+        "kv_table": kv_rows,
+        "parity": "exact",
+        "gate_zero_shared_span_prefill":
+            warm[0]["prefill_chunks"] == warm_chunks_expected,
+        "gate_warm_ttft_le_cold": ttft_warm <= ttft_cold,
+    }
+    save_results("paging", payload)
+    if gate:
+        ok_disp = payload["gate_zero_shared_span_prefill"]
+        ok_ttft = payload["gate_warm_ttft_le_cold"]
+        print(f"  → paging gate: shared-span prefill dispatches "
+              f"{'ZERO' if ok_disp else 'NONZERO'}; warm TTFT "
+              f"{ttft_warm:.1f} ms vs cold {ttft_cold:.1f} ms — "
+              f"{'PASS' if ok_disp and ok_ttft else 'FAIL'}")
+        if not (ok_disp and ok_ttft):
+            raise SystemExit(
+                f"prefix-reuse gate failed: chunks "
+                f"{warm[0]['prefill_chunks']} (expected "
+                f"{warm_chunks_expected}), ttft warm {ttft_warm:.2f} "
+                f"vs cold {ttft_cold:.2f}")
+    return payload
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -188,8 +337,16 @@ if __name__ == "__main__":
     ap.add_argument("--gate", type=float, default=0.0,
                     help="fail unless 4-slot continuous tok/s ≥ GATE × "
                          "1-slot sequential (CI regression gate)")
+    ap.add_argument("--prefix-reuse", action="store_true",
+                    help="run the radix prefix-cache reuse benchmark "
+                         "(BENCH_paging.json)")
+    ap.add_argument("--gate-paging", action="store_true",
+                    help="fail unless a warm radix hit skips the shared "
+                         "span's prefill dispatches and warm TTFT ≤ cold")
     args = ap.parse_args()
-    if args.serving_only or args.gate > 0:
+    if args.prefix_reuse or args.gate_paging:
+        run_prefix_reuse(quick=args.quick, gate=args.gate_paging)
+    elif args.serving_only or args.gate > 0:
         run_serving(quick=args.quick, gate=args.gate)
     else:
         run(quick=args.quick)

@@ -125,7 +125,9 @@ def _emit_moe_ffn(g: GraphBuilder, cfg: ModelConfig, x: Ref,
 def build_decode_graph(params: Dict[str, Any], cfg: ModelConfig, *,
                        batch: int, max_len: int,
                        fusion: FusionSpec = FusionSpec(),
-                       slot_pos: bool = False) -> OpGraph:
+                       slot_pos: bool = False, paged: bool = False,
+                       block_size: int = 16,
+                       num_blocks: Optional[int] = None) -> OpGraph:
     """One autoregressive decode step as an explicit dispatch stream.
 
     Inputs:  tokens (B,1) int32, pos () int32, k_cache/v_cache per layer.
@@ -137,16 +139,39 @@ def build_decode_graph(params: Dict[str, Any], cfg: ModelConfig, *,
     tables are gathered per row.  Dispatch count is IDENTICAL to the
     uniform-position graph; only the op operand ranks change, which is what
     lets one cycle amortize the whole dispatch stream over B slots.
+
+    ``paged=True`` (implies per-row positions) swaps the dense per-layer
+    caches for block arenas read through a shared ``block_table`` (B, W)
+    input: the cache write becomes ``cache_update_paged`` and the gather
+    folds into ``sdpa_paged``, so the dispatch count stays IDENTICAL to
+    the ``slot_pos`` graph — paging is free in per-op dispatch accounting.
     """
     hd = cfg.resolved_head_dim
     nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
     eps = cfg.rms_eps
+    if paged:
+        slot_pos = True
+        width = -(-max_len // block_size)
+        if num_blocks is None:
+            num_blocks = batch * width + 1
     g = GraphBuilder()
 
     tokens = g.input("tokens", (batch, 1), jnp.int32)
     pos = g.input("pos", (batch,) if slot_pos else (), jnp.int32)
+    btab = g.input("block_table", (batch, width), jnp.int32) if paged \
+        else None
     caches = []
     for i in range(cfg.num_layers):
+        if paged:
+            caches.append((
+                g.input(f"k_arena_{i}",
+                        (num_blocks, block_size, cfg.num_kv_heads, hd),
+                        jnp.dtype(cfg.dtype)),
+                g.input(f"v_arena_{i}",
+                        (num_blocks, block_size, cfg.num_kv_heads, hd),
+                        jnp.dtype(cfg.dtype)),
+            ))
+            continue
         caches.append((
             g.input(f"k_cache_{i}", (batch, max_len, cfg.num_kv_heads, hd),
                     jnp.dtype(cfg.dtype)),
@@ -217,12 +242,21 @@ def build_decode_graph(params: Dict[str, Any], cfg: ModelConfig, *,
         k = _emit_rope(g, k, cos, sin, f"{t}/rope_k")
         k = g.op("cast", k, dtype=cfg.dtype, tag=t)
         kc, vc = caches[i]
-        upd = "cache_update_rows" if slot_pos else "cache_update"
-        kc = g.op(upd, kc, k, pos, donate=(0,), tag=f"{t}/k_cache")
-        vc = g.op(upd, vc, v, pos, donate=(0,), tag=f"{t}/v_cache")
-        g.output(f"k_cache_{i}", kc)
-        g.output(f"v_cache_{i}", vc)
-        o = g.op("sdpa", q, kc, vc, length, tag=f"{t}/sdpa")
+        if paged:
+            kc = g.op("cache_update_paged", kc, k, btab, pos, donate=(0,),
+                      block_size=block_size, tag=f"{t}/k_cache")
+            vc = g.op("cache_update_paged", vc, v, btab, pos, donate=(0,),
+                      block_size=block_size, tag=f"{t}/v_cache")
+            g.output(f"k_arena_{i}", kc)
+            g.output(f"v_arena_{i}", vc)
+            o = g.op("sdpa_paged", q, kc, vc, btab, length, tag=f"{t}/sdpa")
+        else:
+            upd = "cache_update_rows" if slot_pos else "cache_update"
+            kc = g.op(upd, kc, k, pos, donate=(0,), tag=f"{t}/k_cache")
+            vc = g.op(upd, vc, v, pos, donate=(0,), tag=f"{t}/v_cache")
+            g.output(f"k_cache_{i}", kc)
+            g.output(f"v_cache_{i}", vc)
+            o = g.op("sdpa", q, kc, vc, length, tag=f"{t}/sdpa")
         o = g.op("reshape", o, shape=(batch, 1, nq), tag=t)
         o = g.op("matmul", o, wa["wo"], tag=f"{t}/o_proj")
         x = g.op("add", x, o, tag=f"{t}/resid1")
@@ -252,7 +286,8 @@ def build_decode_graph(params: Dict[str, Any], cfg: ModelConfig, *,
     g.output("next_token", nxt)
     g.output("logits", logits)
     return g.build(kind="decode", arch=cfg.name, fusion=fusion.level,
-                   batch=batch, max_len=max_len, slot_pos=slot_pos)
+                   batch=batch, max_len=max_len, slot_pos=slot_pos,
+                   paged=paged, block_size=block_size if paged else None)
 
 
 def build_prefill_graph(params: Dict[str, Any], cfg: ModelConfig, *,

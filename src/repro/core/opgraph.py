@@ -38,6 +38,29 @@ def _sdpa_prefill(q, k, v):
     return L.causal_attention(q, k, v)
 
 
+def _sdpa_paged(q, k_arena, v_arena, table, length):
+    """Decode attention through a per-row block table (paged KV).
+
+    The block gather is folded INTO the attention op, so the paged decode
+    graph keeps the exact dispatch count of the dense slot-position graph —
+    the layout change is free in the paper's per-operation accounting.
+    """
+    from repro.models import layers as L
+    kd = k_arena[table]                       # (B, W, Bs, KV, hd)
+    b, w, bs = kd.shape[:3]
+    kd = kd.reshape(b, w * bs, *kd.shape[3:])
+    vd = v_arena[table].reshape(b, w * bs, *kd.shape[2:])
+    return L.decode_attention(q, kd, vd, length)
+
+
+def _cache_update_paged(arena, val, table, pos, *, block_size):
+    """Per-row scatter of one new token's K/V into its current block."""
+    rows = jnp.arange(table.shape[0])
+    bids = table[rows, pos // block_size]
+    return arena.at[bids, pos % block_size].set(
+        val[:, 0].astype(arena.dtype))
+
+
 # Fused-op backend: "xla" (jnp bodies fused by XLA — the wall-clock path on
 # the CPU host) or "pallas" (the hand-written TPU kernels from
 # repro.kernels — the production TPU path; interpret-mode on CPU, so used
@@ -126,6 +149,8 @@ OPS: Dict[str, Callable] = {
         jnp.arange(cache.shape[0]), pos].set(val[:, 0].astype(cache.dtype)),
     "sdpa": _sdpa,
     "sdpa_prefill": _sdpa_prefill,
+    "sdpa_paged": _sdpa_paged,
+    "cache_update_paged": _cache_update_paged,
     # --- fused ops (Table 5 / §6.1) ------------------------------------
     "fused_rmsnorm": _fused_rmsnorm,
     "fused_mlp": _fused_mlp,
@@ -152,12 +177,12 @@ TAXONOMY: Dict[str, str] = {
     "fused_mlp": "linear",
     "mul": "multiply",
     "add": "add", "add_eps": "add",
-    "sdpa": "sdpa", "sdpa_prefill": "sdpa",
+    "sdpa": "sdpa", "sdpa_prefill": "sdpa", "sdpa_paged": "sdpa",
     "silu": "silu", "gelu": "silu",
     "pow": "rmsnorm_comp", "mean": "rmsnorm_comp", "rsqrt": "rmsnorm_comp",
     "fused_rmsnorm": "rmsnorm_comp",
     "concat": "concat", "cache_update": "concat",
-    "cache_update_rows": "concat",
+    "cache_update_rows": "concat", "cache_update_paged": "concat",
 }
 _OTHER = "other"
 

@@ -46,6 +46,19 @@ def main() -> None:
                          "decode dispatch per slot per cycle)")
     ap.add_argument("--requests", type=int, default=0,
                     help="overlapping requests to schedule (default 2×slots)")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="scheduler KV layout: dense slot rows or the "
+                         "paged block pool with radix prefix caching")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="paged only: split prompts into N-token prefill "
+                         "chunks interleaved with decode cycles")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="paged only: radix prefix cache (warm hits skip "
+                         "prefill dispatches for the shared span)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged only: KV block size in tokens")
     ap.add_argument("--out", default=None, help="write JSON rows here")
     args = ap.parse_args()
 
@@ -85,10 +98,17 @@ def main() -> None:
                                 readback=args.readback)
         row = rep.row()
         print(f"[serve] {row}")
-        if args.num_slots > 0:
+        if args.num_slots > 0 and args.kv_layout == "paged" \
+                and not backend.capabilities.paged_kv:
+            print(f"[sched] {mode}: no paged-KV support, skipping scheduler")
+        elif args.num_slots > 0:
             n_req = args.requests or 2 * args.num_slots
             sched = Scheduler(session, num_slots=args.num_slots,
-                              continuous=args.continuous)
+                              continuous=args.continuous,
+                              kv_layout=args.kv_layout,
+                              prefill_chunk=args.prefill_chunk,
+                              prefix_cache=args.prefix_cache,
+                              block_size=args.block_size)
             for i in range(n_req):
                 p = rng.integers(0, cfg.vocab_size,
                                  size=(1, args.prompt_len)).astype(np.int32)

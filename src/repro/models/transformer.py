@@ -317,16 +317,22 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Params,
     return {"k": kcache, "v": vcache, "pos": pos + 1}, logits
 
 
-def decode_block_rows(p: Params, cfg: ModelConfig, x: jax.Array,
-                      kc: jax.Array, vc: jax.Array, pos: jax.Array,
-                      ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """One layer of the PER-ROW-position decode path → (x', (kc', vc')).
+def decode_core_rows(p: Params, cfg: ModelConfig, x: jax.Array,
+                     kc: jax.Array, vc: jax.Array, pos: jax.Array, *,
+                     emit_cache: bool = True
+                     ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Shared per-layer math for PER-ROW-position decode.
 
     Identical math to :func:`decode_block`, except every batch row carries
     its own cache position ``pos (B,)`` — the continuous-batching regime
     where each scheduler slot sits at a different sequence offset.  The KV
     write is a per-row scatter instead of a shared dynamic slice, and the
     attention mask is per-row (``decode_attention`` takes vector lengths).
+
+    ``emit_cache=True`` returns the updated dense caches (the slot-major
+    pool carries them forward); ``emit_cache=False`` returns just the new
+    token's (k, v) rows — the paged path scatters those into its block
+    arena instead of materializing a dense cache copy.
     """
     b = x.shape[0]
     positions = pos[:, None]                         # (B, 1)
@@ -340,7 +346,44 @@ def decode_block_rows(p: Params, cfg: ModelConfig, x: jax.Array,
     o = L.decode_attention(q, kc, vc, pos + 1, window=cfg.sliding_window)
     x = x + L.linear(o.reshape(b, 1, -1), p["attn"]["wo"])
     f, _ = ffn_block(p["ffn"], cfg, L.rmsnorm(x, p["ffn_norm"], cfg.rms_eps))
-    return x + f, (kc, vc)
+    out = (kc, vc) if emit_cache else (k[:, 0], v[:, 0])
+    return x + f, out
+
+
+def decode_block_rows(p: Params, cfg: ModelConfig, x: jax.Array,
+                      kc: jax.Array, vc: jax.Array, pos: jax.Array,
+                      ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One layer of the per-row-position decode path → (x', (kc', vc'))."""
+    return decode_core_rows(p, cfg, x, kc, vc, pos, emit_cache=True)
+
+
+def extend_block(p: Params, cfg: ModelConfig, x: jax.Array, kc: jax.Array,
+                 vc: jax.Array, pos0: jax.Array, positions: jax.Array
+                 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One layer of the MULTI-token extend path (chunked prefill).
+
+    ``x`` (B, C, d) is a chunk of C prompt tokens starting at absolute
+    position ``pos0`` against a cache ``kc``/``vc`` (B, T, KV, hd) already
+    holding the first ``pos0`` positions.  The chunk's K/V is written at
+    [pos0, pos0+C) and the chunk attends causally over the whole valid
+    prefix (``q_offset`` masks everything past each query's own position,
+    so trailing cache garbage — padded chunk tail included — is
+    unreachable).  Returns (x', (k_chunk, v_chunk)); the caller persists
+    the chunk K/V into its cache layout.  With C == prompt length this IS
+    whole-prompt prefill, which is the chunking parity argument.
+    """
+    b, s, _ = x.shape
+    xn = L.rmsnorm(x, p["attn_norm"], cfg.rms_eps)
+    q, k, v = _project_qkv(p["attn"], cfg, xn)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos0, 0, 0))
+    o = L.causal_attention(q, kc, vc, q_offset=pos0,
+                           window=cfg.sliding_window)
+    x = x + L.linear(o.reshape(b, s, -1), p["attn"]["wo"])
+    f, _ = ffn_block(p["ffn"], cfg, L.rmsnorm(x, p["ffn_norm"], cfg.rms_eps))
+    return x + f, (k, v)
 
 
 def decode_step_rows(params: Params, cfg: ModelConfig, cache: Params,

@@ -6,6 +6,7 @@ from repro.serving.backends import (BackendCapabilities, DispatchStats,
                                     get_backend, register_backend)
 from repro.serving.engine import GenerationEngine, GenerationResult
 from repro.serving.kvcache import SlotKVCache
+from repro.serving.paging import BlockPool, PagedKVCache, RadixPrefixCache
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.session import (BenchmarkReport, InferenceSession,
                                    Scheduler, SchedulerStats, ServeRequest,
@@ -17,4 +18,5 @@ __all__ = [
     "GenerationEngine", "GenerationResult", "SamplerConfig", "sample",
     "BenchmarkReport", "InferenceSession", "Scheduler", "SchedulerStats",
     "ServeRequest", "ServeResult", "SlotKVCache",
+    "BlockPool", "PagedKVCache", "RadixPrefixCache",
 ]

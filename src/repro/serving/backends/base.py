@@ -35,6 +35,14 @@ State = Dict[str, Any]
 BatchState = Dict[str, Any]     # opaque slot-pool state (continuous batching)
 
 
+class PagedAdmit(NamedTuple):
+    """Result of admitting a request into a paged slot: how much of the
+    prompt the radix prefix cache satisfied (zero prefill dispatches for
+    that span) vs. the total prompt length."""
+    cached: int
+    total: int
+
+
 class StepOutput(NamedTuple):
     """One prefill/decode step's device-side outputs (nothing read back).
 
@@ -58,6 +66,9 @@ class BackendCapabilities:
     decode_batch: bool = False      # TRUE batched decode_batch (one dispatch
                                     # stream per cycle for ALL slots); False
                                     # ⇒ the per-slot-loop fallback runs
+    paged_kv: bool = False          # paged block-pool KV + chunked prefill +
+                                    # radix prefix cache (alloc_slots_paged /
+                                    # admit_paged / prefill_paged_chunk)
 
 
 @dataclasses.dataclass
@@ -190,6 +201,38 @@ class ExecutionBackend(abc.ABC):
         else:
             nxt = None
         return bstate, StepOutput(logits, nxt)
+
+    # -- paged KV (block pool + radix prefix cache + chunked prefill) ------
+    # Backends advertising ``capabilities.paged_kv`` replace the dense
+    # slot pool with fixed-size KV blocks: admission is a radix-cache match
+    # plus lazy block-table setup (NO compute), prefill runs as
+    # ``prefill_paged_chunk`` calls the scheduler interleaves with decode
+    # cycles, and ``decode_batch``/``release_slot`` accept the paged
+    # ``bstate`` transparently.  Dense remains the fallback layout.
+
+    def alloc_slots_paged(self, num_slots: int, *, block_size: int = 16,
+                          prefill_chunk: Optional[int] = None,
+                          num_blocks: Optional[int] = None,
+                          prefix_cache: bool = True) -> BatchState:
+        """A paged batch state: block pool + per-slot tables (+ radix)."""
+        raise NotImplementedError(
+            f"{self.capabilities.name!r} has no paged-KV support")
+
+    def admit_paged(self, bstate: BatchState, slot: int, prompt
+                    ) -> "PagedAdmit":
+        """Bind a prompt to ``slot``: radix prefix match, shared-block
+        adoption (COW at a partial boundary), chunk cursor setup.  Cheap —
+        the prefill compute happens in ``prefill_paged_chunk``."""
+        raise NotImplementedError(
+            f"{self.capabilities.name!r} has no paged-KV support")
+
+    def prefill_paged_chunk(self, bstate: BatchState, slot: int
+                            ) -> Optional[StepOutput]:
+        """Run the next prefill chunk for ``slot`` (one dispatch).  Returns
+        the first-token ``StepOutput`` when the prompt completes (the
+        finished prefix is inserted into the radix cache), else None."""
+        raise NotImplementedError(
+            f"{self.capabilities.name!r} has no paged-KV support")
 
     # -- uniform instrumentation ------------------------------------------
     def __init__(self) -> None:

@@ -14,17 +14,18 @@ dispatch overhead is paid once regardless of occupancy.
 from __future__ import annotations
 
 import time
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.engine import RunStats
 from repro.models import transformer
 from repro.serving.kvcache import SlotKVCache
 from repro.serving.backends.base import (BackendCapabilities, BatchState,
-                                         ExecutionBackend, State, StepOutput,
-                                         register_backend)
+                                         ExecutionBackend, PagedAdmit, State,
+                                         StepOutput, register_backend)
 
 
 @register_backend("model")
@@ -54,12 +55,24 @@ class ModelBackend(ExecutionBackend):
             return (cache["k"], cache["v"], logits,
                     jnp.argmax(logits, -1).astype(jnp.int32))
 
+        def _decode_paged(p, ak, av, table, pos, t):
+            from repro.serving.paging import decode_step_paged
+            return decode_step_paged(p, self.cfg, ak, av, table, pos, t)
+
+        def _extend_paged(p, ak, av, table_row, pos0, valid, t):
+            from repro.serving.paging import extend_step_paged
+            return extend_step_paged(p, self.cfg, ak, av, table_row, pos0,
+                                     valid, t)
+
         self._jit_prefill = jax.jit(_prefill)
         self._jit_decode = jax.jit(_decode)
         self._jit_decode_rows = jax.jit(_decode_rows, donate_argnums=(1, 2))
+        self._jit_decode_paged = jax.jit(_decode_paged, donate_argnums=(1, 2))
+        self._jit_extend_paged = jax.jit(_extend_paged, donate_argnums=(1, 2))
+        batchable = self.cfg.family in ("dense", "moe")
         self.capabilities = BackendCapabilities(
             name=mode, dispatches_per_token=1, device_argmax=True,
-            decode_batch=self.cfg.family in ("dense", "moe"))
+            decode_batch=batchable, paged_kv=batchable)
 
     # ------------------------------------------------------------------
     def _run(self, fn, *args) -> Tuple[object, StepOutput]:
@@ -100,6 +113,10 @@ class ModelBackend(ExecutionBackend):
         return bstate
 
     def release_slot(self, bstate: BatchState, slot: int) -> BatchState:
+        if "paged" in bstate:
+            bstate["paged"].free(slot)
+            bstate["meta"].pop(slot, None)
+            return bstate
         if "kv" not in bstate:
             return super().release_slot(bstate, slot)
         bstate["kv"].free(slot)
@@ -108,6 +125,8 @@ class ModelBackend(ExecutionBackend):
     def decode_batch(self, bstate: BatchState, tokens,
                      slots: Sequence[int]) -> Tuple[BatchState, StepOutput]:
         """ONE dispatch advances every slot at its own cache position."""
+        if "paged" in bstate:
+            return self._decode_batch_paged(bstate, tokens, slots)
         if "kv" not in bstate:
             return super().decode_batch(bstate, tokens, slots)
         kv: SlotKVCache = bstate["kv"]
@@ -120,4 +139,94 @@ class ModelBackend(ExecutionBackend):
                               sync_mode="none", enqueue_s=enq))
         kv.tree = {"k": k, "v": v}
         kv.advance(slots)
+        return bstate, StepOutput(logits, nxt)
+
+    # -- paged KV: block pool + radix prefix cache + chunked prefill ------
+    def alloc_slots_paged(self, num_slots: int, *, block_size: int = 16,
+                          prefill_chunk: Optional[int] = None,
+                          num_blocks: Optional[int] = None,
+                          prefix_cache: bool = True) -> BatchState:
+        if not self.capabilities.paged_kv:
+            raise NotImplementedError(
+                f"{self.capabilities.name!r} has no paged-KV support")
+        from repro.serving.paging import PagedKVCache, RadixPrefixCache
+        # padded final chunks write up to chunk-1 tokens past the prompt
+        slack = max(0, (prefill_chunk or 1) - 1)
+        pg = PagedKVCache(self.cfg, num_slots, self.max_len,
+                          block_size=block_size, num_blocks=num_blocks,
+                          table_slack=slack)
+        radix = RadixPrefixCache(pg.pool, block_size) if prefix_cache \
+            else None
+        pg.radix = radix
+        return {"num_slots": num_slots, "paged": pg, "radix": radix,
+                "chunk": prefill_chunk, "meta": {}}
+
+    def admit_paged(self, bstate: BatchState, slot: int, prompt
+                    ) -> PagedAdmit:
+        """Radix match + shared-block adoption; no prefill compute."""
+        pg = bstate["paged"]
+        radix = bstate["radix"]
+        toks = np.asarray(prompt, np.int32).reshape(-1)
+        pg.allocate(slot)
+        # cap the match at plen-1: the last prompt token always runs
+        # through the extend path so first-token logits exist
+        matched, blocks = (radix.match(toks[:-1]) if radix is not None
+                           else (0, []))
+        copies = pg.adopt_prefix(slot, matched, blocks)
+        if copies:
+            self._record(RunStats(wall_s=0.0, dispatches=copies, shape_ops=0,
+                                  sync_mode="none"))
+        bstate["meta"][slot] = {"prompt": toks, "cursor": matched}
+        return PagedAdmit(cached=matched, total=len(toks))
+
+    def prefill_paged_chunk(self, bstate: BatchState, slot: int
+                            ) -> Optional[StepOutput]:
+        pg = bstate["paged"]
+        meta = bstate["meta"][slot]
+        toks, cur = meta["prompt"], meta["cursor"]
+        plen = len(toks)
+        c = bstate["chunk"] or (plen - cur)
+        valid = min(c, plen - cur)
+        buf = np.zeros((1, c), np.int32)
+        buf[0, :valid] = toks[cur:cur + valid]
+        copies = pg.ensure_writable(slot, cur, cur + c)
+        t0 = time.perf_counter()
+        ak, av, logits, nxt = self._jit_extend_paged(
+            self.params, pg.pool.arena_k, pg.pool.arena_v,
+            jnp.asarray(pg.table[slot:slot + 1]), jnp.int32(cur),
+            jnp.int32(valid), jnp.asarray(buf))
+        enq = time.perf_counter() - t0
+        self._record(RunStats(wall_s=enq, dispatches=1 + copies, shape_ops=0,
+                              sync_mode="none", enqueue_s=enq))
+        pg.pool.set_arena(ak, av)
+        meta["cursor"] = cur + valid
+        pg.pos[slot] = cur + valid
+        if meta["cursor"] < plen:
+            return None
+        radix = bstate["radix"]
+        if radix is not None:
+            # cache the prompt's FULL blocks; the partial tail block stays
+            # private — decode keeps appending into it
+            nfull = plen // pg.block_size
+            radix.insert(toks[:nfull * pg.block_size],
+                         pg.chain(slot, nfull * pg.block_size))
+        return StepOutput(logits, nxt)
+
+    def _decode_batch_paged(self, bstate: BatchState, tokens,
+                            slots: Sequence[int]
+                            ) -> Tuple[BatchState, StepOutput]:
+        pg = bstate["paged"]
+        copies = 0
+        for s in slots:
+            copies += pg.ensure_writable(s, int(pg.pos[s]), int(pg.pos[s]) + 1)
+        t0 = time.perf_counter()
+        ak, av, logits, nxt = self._jit_decode_paged(
+            self.params, pg.pool.arena_k, pg.pool.arena_v,
+            jnp.asarray(pg.table), jnp.asarray(pg.pos),
+            jnp.asarray(tokens, jnp.int32))
+        enq = time.perf_counter() - t0
+        self._record(RunStats(wall_s=enq, dispatches=1 + copies, shape_ops=0,
+                              sync_mode="none", enqueue_s=enq))
+        pg.pool.set_arena(ak, av)
+        pg.advance(slots)
         return bstate, StepOutput(logits, nxt)

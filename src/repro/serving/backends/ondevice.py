@@ -51,6 +51,7 @@ class OnDeviceBackend(ModelBackend):
             device_argmax=True,
             on_device_loop=True,
             decode_batch=self.capabilities.decode_batch,  # inherited rows path
+            paged_kv=self.capabilities.paged_kv,          # inherited paged path
         )
 
     def generate_ondevice(self, state: State, first_tok, n_new: int,

@@ -178,3 +178,22 @@ class SlotKVCache:
         """Host-side position bump for the slots a decode cycle fed."""
         for s in slots:
             self.pos[s] += 1
+
+    # -- memory accounting (dense-vs-paged utilization table) -----------
+    @property
+    def bytes_allocated(self) -> int:
+        """Full pool footprint — dense reserves max_len for every slot."""
+        total = 0
+        for a in jax.tree.leaves(self.tree):
+            n = 1
+            for d in a.shape:
+                n *= d
+            total += n * jnp.dtype(a.dtype).itemsize
+        return total
+
+    @property
+    def bytes_live(self) -> int:
+        """Bytes holding actual sequence data (Σ live-slot pos tokens)."""
+        max_len = jax.tree.leaves(self.tree)[0].shape[self.slot_axis + 1]
+        per_token = self.bytes_allocated // (self.num_slots * max_len)
+        return int(sum(int(self.pos[s]) for s in self._live)) * per_token

@@ -1,0 +1,324 @@
+"""Paged KV-cache block allocator.
+
+Dense per-slot KV rows (``SlotKVCache``) reserve ``max_len`` tokens per
+slot up front, so memory scales with the WORST-CASE sequence length and
+identical prefixes are stored once per request.  The paged layout instead
+carves one preallocated arena into fixed-size **blocks**:
+
+    arena_k / arena_v : (num_blocks, layers, block_size, kv_heads, head_dim)
+
+``BlockPool`` owns the arena plus the host-side free list and per-block
+reference counts; blocks are shared read-only between requests (and the
+``RadixPrefixCache``) and copy-on-write forked the moment a writer touches
+a block someone else still references.  ``PagedKVCache`` layers the slot
+bookkeeping on top: a per-slot **block table** mapping logical token
+positions to arena blocks, lazy block allocation as sequences grow, and
+LRU eviction of cache-only chains under pool pressure (delegated to the
+attached radix cache — an active slot's own references always keep its
+blocks alive, so eviction can never corrupt in-flight decode).
+
+Block 0 is reserved as a **trash block**: free slots' table rows point at
+it, so the batched decode dispatch can scatter its don't-care rows without
+host-side masking.
+"""
+from __future__ import annotations
+
+import functools
+import heapq
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def _ceildiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _copy_block(ak, av, src, dst):
+    """Device-side block copy (the COW fork): arena[dst] = arena[src]."""
+    def cp(a):
+        row = jax.lax.dynamic_index_in_dim(a, src, 0, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(a, row, dst, 0)
+    return cp(ak), cp(av)
+
+
+class BlockPool:
+    """Fixed-size KV block arena + free list + refcounts + COW.
+
+    The arena is allocated ONCE; every block the serving layer ever uses is
+    a row of it.  ``alloc`` hands out the lowest free block id (refcount 1);
+    ``incref``/``decref`` manage sharing (radix-cache chains and admitted
+    requests each hold their own reference); a block returns to the free
+    list exactly when its refcount hits zero.  ``cow`` forks a shared block
+    before a write diverges it.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int
+                 ) -> None:
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (one is the trash block)")
+        hd = cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.dtype)
+        shape = (num_blocks, cfg.num_layers, block_size, cfg.num_kv_heads, hd)
+        self.arena_k = jnp.zeros(shape, dt)
+        self.arena_v = jnp.zeros(shape, dt)
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.refcount = np.zeros((num_blocks,), np.int32)
+        self._free: List[int] = list(range(num_blocks))
+        heapq.heapify(self._free)
+        self.cow_forks = 0
+
+    # -- lifecycle ------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self) -> int:
+        """Claim the lowest free block (refcount 1)."""
+        if not self._free:
+            raise RuntimeError(
+                f"block pool exhausted ({self.num_blocks} blocks)")
+        bid = heapq.heappop(self._free)
+        assert self.refcount[bid] == 0
+        self.refcount[bid] = 1
+        return bid
+
+    def incref(self, bid: int) -> None:
+        if self.refcount[bid] <= 0:
+            raise RuntimeError(f"incref on free block {bid}")
+        self.refcount[bid] += 1
+
+    def decref(self, bid: int) -> bool:
+        """Drop one reference; returns True when the block was freed."""
+        if self.refcount[bid] <= 0:
+            raise RuntimeError(f"decref on free block {bid}")
+        self.refcount[bid] -= 1
+        if self.refcount[bid] == 0:
+            heapq.heappush(self._free, bid)
+            return True
+        return False
+
+    # -- device data ----------------------------------------------------
+    def copy_block(self, src: int, dst: int) -> None:
+        """One device dispatch: fork ``src``'s KV into ``dst``."""
+        self.arena_k, self.arena_v = _copy_block(
+            self.arena_k, self.arena_v, jnp.int32(src), jnp.int32(dst))
+
+    def cow(self, bid: int) -> Tuple[int, bool]:
+        """Copy-on-write: return a block safe to write through.
+
+        refcount 1 ⇒ exclusive already, returned as-is; otherwise fork into
+        a fresh block (caller keeps its reference on ``bid`` to drop)."""
+        if self.refcount[bid] == 1:
+            return bid, False
+        dst = self.alloc()
+        self.copy_block(bid, dst)
+        self.cow_forks += 1
+        return dst, True
+
+    def set_arena(self, ak: jax.Array, av: jax.Array) -> None:
+        """Adopt updated arenas returned by a jitted decode/extend step."""
+        self.arena_k, self.arena_v = ak, av
+
+    # -- memory accounting (dense-vs-paged utilization table) -----------
+    @property
+    def block_bytes(self) -> int:
+        per = 1
+        for d in self.arena_k.shape[1:]:
+            per *= d
+        return 2 * per * jnp.dtype(self.arena_k.dtype).itemsize
+
+    @property
+    def bytes_allocated(self) -> int:
+        return self.num_blocks * self.block_bytes
+
+    @property
+    def bytes_live(self) -> int:
+        return self.num_live * self.block_bytes
+
+
+class PagedKVCache:
+    """Slot bookkeeping over a ``BlockPool``: the paged ``SlotKVCache``.
+
+    Each scheduler slot owns a **block table** row (``(width,)`` int32 of
+    arena block ids; unpopulated entries point at the trash block) plus a
+    ``pos`` valid-length, mirroring the dense pool's host contract
+    (``allocate``/``free``/``advance``/``occupancy``).  Blocks are claimed
+    lazily as the sequence crosses block boundaries (``ensure_writable``)
+    and shared prefixes are adopted by reference from the radix cache
+    (``adopt_prefix``), with the boundary partial block COW-forked so the
+    new request can append without touching shared state.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int, *,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 table_slack: int = 0) -> None:
+        self.block_size = block_size
+        self.num_slots = num_slots
+        self.max_len = max_len
+        # chunked prefill pads the final chunk, so tables cover a little
+        # more than max_len; padded writes land in blocks decode reuses
+        self.width = _ceildiv(max_len + table_slack, block_size)
+        if num_blocks is None:
+            # every slot full + two spare chains for the prefix cache
+            num_blocks = (num_slots + 2) * self.width
+        self.pool = BlockPool(cfg, num_blocks + 1, block_size)
+        self.trash = self.pool.alloc()          # block 0: don't-care writes
+        assert self.trash == 0
+        self.table = np.zeros((num_slots, self.width), np.int32)
+        self.pos = np.zeros((num_slots,), np.int32)
+        self._free: List[int] = list(range(num_slots))
+        self._live: Set[int] = set()
+        self._owned: Dict[int, List[int]] = {}
+        self.radix = None                       # set by the owning backend
+        self.cow_copies = 0
+
+    # -- slot lifecycle (mirrors SlotKVCache) ---------------------------
+    @property
+    def occupancy(self) -> int:
+        return len(self._live)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def allocate(self, slot: Optional[int] = None) -> int:
+        if slot is None:
+            if not self._free:
+                raise RuntimeError(f"KV pool full ({self.num_slots} slots)")
+            slot = min(self._free)
+        if slot in self._live:
+            raise RuntimeError(f"slot {slot} already allocated")
+        if not 0 <= slot < self.num_slots:
+            raise IndexError(f"slot {slot} out of range [0, {self.num_slots})")
+        self._free.remove(slot)
+        self._live.add(slot)
+        self._owned[slot] = []
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Release a slot: drop every block reference it holds.  Blocks the
+        radix cache (or another slot) still references stay live."""
+        if slot not in self._live:
+            raise RuntimeError(f"slot {slot} is not allocated")
+        for bid in self._owned.pop(slot):
+            self.pool.decref(bid)
+        self._live.discard(slot)
+        self._free.append(slot)
+        self.table[slot, :] = self.trash
+        self.pos[slot] = 0
+
+    def advance(self, slots: Sequence[int]) -> None:
+        for s in slots:
+            self.pos[s] += 1
+
+    # -- block management -----------------------------------------------
+    def _alloc_block(self) -> int:
+        """Alloc, evicting LRU prefix-cache chains under pressure."""
+        while self.pool.num_free == 0:
+            if self.radix is None or not self.radix.evict_one():
+                raise RuntimeError(
+                    "paged KV pool exhausted and nothing evictable")
+        return self.pool.alloc()
+
+    def _fork_block(self, src: int) -> int:
+        """COW fork: copy ``src`` into a fresh exclusively-owned block
+        (one device dispatch), evicting cache chains if the pool is dry."""
+        dst = self._alloc_block()
+        self.pool.copy_block(src, dst)
+        self.pool.cow_forks += 1
+        self.cow_copies += 1
+        return dst
+
+    def adopt_prefix(self, slot: int, matched: int, blocks: Sequence[int]
+                     ) -> int:
+        """Wire a radix-cache hit into ``slot``'s table.
+
+        Full blocks of the matched span are shared by reference; a partial
+        boundary block (prefix split mid-block) is COW-forked so this
+        slot's prefill can fill its tail privately.  Returns the number of
+        device copy dispatches made (0 or 1)."""
+        if slot not in self._live:
+            raise RuntimeError(f"adopt into unallocated slot {slot}")
+        bs = self.block_size
+        nfull = matched // bs
+        own = self._owned[slot]
+        for i in range(nfull):
+            bid = int(blocks[i])
+            self.pool.incref(bid)
+            self.table[slot, i] = bid
+            own.append(bid)
+        copies = 0
+        if matched % bs:
+            dst = self._fork_block(int(blocks[nfull]))
+            copies = 1
+            self.table[slot, nfull] = dst
+            own.append(dst)
+        self.pos[slot] = matched
+        return copies
+
+    def ensure_writable(self, slot: int, start: int, end: int) -> int:
+        """Make token positions [start, end) of ``slot`` writable.
+
+        Unpopulated table entries get fresh blocks; entries still shared
+        with the radix cache or another slot are COW-forked first (so a
+        write can never diverge someone else's prefix).  Returns the number
+        of device copy dispatches made."""
+        if slot not in self._live:
+            raise RuntimeError(f"write to unallocated slot {slot}")
+        bs = self.block_size
+        if end > self.width * bs:
+            raise RuntimeError(
+                f"paged KV overflow: need {end} tokens, table covers "
+                f"{self.width * bs}")
+        copies = 0
+        own = self._owned[slot]
+        for i in range(start // bs, _ceildiv(end, bs)):
+            bid = int(self.table[slot, i])
+            if bid == self.trash:
+                nb = self._alloc_block()
+                self.table[slot, i] = nb
+                own.append(nb)
+            elif self.pool.refcount[bid] > 1:
+                nb = self._fork_block(bid)
+                copies += 1
+                self.pool.decref(bid)
+                own[own.index(bid)] = nb
+                self.table[slot, i] = nb
+        return copies
+
+    def chain(self, slot: int, tokens: int) -> List[int]:
+        """Block ids covering the first ``tokens`` positions of ``slot``."""
+        return [int(self.table[slot, i])
+                for i in range(_ceildiv(tokens, self.block_size))]
+
+    # -- debug / test readout -------------------------------------------
+    def gather(self, slot: int, length: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Host copy of one slot's logical KV (layers, length, KV, hd)."""
+        n = int(self.pos[slot]) if length is None else length
+        ak = np.asarray(self.pool.arena_k)
+        av = np.asarray(self.pool.arena_v)
+        bs = self.block_size
+        ids = self.table[slot, :_ceildiv(n, bs)]
+        k = np.concatenate([ak[b] for b in ids], axis=1)[:, :n]
+        v = np.concatenate([av[b] for b in ids], axis=1)[:, :n]
+        return {"k": k, "v": v}
+
+    # -- memory accounting ----------------------------------------------
+    @property
+    def bytes_allocated(self) -> int:
+        return self.pool.bytes_allocated
+
+    @property
+    def bytes_live(self) -> int:
+        return self.pool.bytes_live

@@ -1,0 +1,121 @@
+"""Block-table-aware attention: paged decode and chunked-prefill extend.
+
+Both entry points keep the dispatch economics of the dense continuous-
+batching path — ONE jitted executable per decode cycle / prefill chunk —
+while reading and writing K/V through per-slot block tables instead of
+contiguous ``max_len`` rows:
+
+* ``decode_step_paged`` — the paged twin of
+  ``transformer.decode_step_rows``: every scheduler slot advances one
+  token at its own position in the same dispatch, gathering its cache
+  through ``block_table`` and scattering the new token's K/V back into its
+  current (always privately-owned) block.
+* ``extend_step_paged`` — one chunked-prefill step: run ``chunk`` prompt
+  tokens of one slot against everything already cached for it (shared
+  prefix blocks included), append the chunk's K/V into its blocks, and
+  return last-valid-position logits.  Chunks are padded to a fixed width
+  so every chunk reuses one compiled executable; padded positions write
+  into blocks the very next chunk (or decode) overwrites, and the causal
+  mask keeps them unreadable meanwhile.
+
+The gathered dense view is position-identical to the dense cache layout
+(table entry ``i`` covers logical tokens ``[i*block_size, (i+1)*block_size)``),
+so the math — and the greedy token stream — matches the dense path
+exactly; trailing garbage is masked the same way dense ``max_len`` padding
+is.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def gather_blocks(arena: jax.Array, table: jax.Array) -> jax.Array:
+    """(N, L, Bs, KV, hd) arena + (S, W) block table → (L, S, W·Bs, KV, hd)
+    dense per-layer view, position-compatible with the dense cache."""
+    g = arena[table]                               # (S, W, L, Bs, KV, hd)
+    s, w, nl, bs = g.shape[:4]
+    g = jnp.moveaxis(g, 2, 0)                      # (L, S, W, Bs, KV, hd)
+    return g.reshape(nl, s, w * bs, *g.shape[4:])
+
+
+def decode_step_paged(params, cfg: ModelConfig, arena_k: jax.Array,
+                      arena_v: jax.Array, table: jax.Array, pos: jax.Array,
+                      tokens: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One batched decode cycle through per-slot block tables.
+
+    ``table`` (S, W) int32, ``pos`` (S,) int32, ``tokens`` (S, 1) int32 →
+    (arena_k', arena_v', logits (S, 1, V), next_token (S, 1)).  Same single
+    dispatch as the dense rows path; only the cache plumbing differs.
+    """
+    x = params["embed"][tokens]
+    kd = gather_blocks(arena_k, table)
+    vd = gather_blocks(arena_v, table)
+
+    def body(carry, xs):
+        p, kc, vc = xs
+        return transformer.decode_core_rows(p, cfg, carry, kc, vc, pos,
+                                            emit_cache=False)
+
+    x, (knew, vnew) = jax.lax.scan(body, x, (params["blocks"], kd, vd))
+    logits = transformer.unembed(params, cfg, x)
+    bs = arena_k.shape[2]
+    rows = jnp.arange(tokens.shape[0])
+    bids = table[rows, pos // bs]
+    offs = pos % bs
+    # knew (L, S, KV, hd) → (S, L, KV, hd): each slot's new token lands in
+    # its current block, which ensure_writable made exclusively ours
+    arena_k = arena_k.at[bids, :, offs].set(
+        jnp.moveaxis(knew, 0, 1).astype(arena_k.dtype))
+    arena_v = arena_v.at[bids, :, offs].set(
+        jnp.moveaxis(vnew, 0, 1).astype(arena_v.dtype))
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    return arena_k, arena_v, logits, nxt
+
+
+def extend_step_paged(params, cfg: ModelConfig, arena_k: jax.Array,
+                      arena_v: jax.Array, table_row: jax.Array,
+                      pos0: jax.Array, valid: jax.Array, tokens: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One prefill chunk for one slot, against its paged cache.
+
+    ``table_row`` (1, W); ``tokens`` (1, C) padded to the chunk width with
+    ``valid`` real tokens starting at absolute position ``pos0``.  Returns
+    (arena_k', arena_v', logits (1, 1, V) at the last VALID position,
+    next_token (1, 1)) — the final chunk's logits seed generation, earlier
+    chunks' are ignored.  A radix-cache hit means ``pos0`` starts past the
+    shared span: those positions are never recomputed (zero prefill
+    dispatches for the shared prefix).
+    """
+    x = params["embed"][tokens]
+    kd = gather_blocks(arena_k, table_row)
+    vd = gather_blocks(arena_v, table_row)
+    c = tokens.shape[1]
+    positions = pos0 + jnp.arange(c)
+
+    def body(carry, xs):
+        p, kc, vc = xs
+        return transformer.extend_block(p, cfg, carry, kc, vc, pos0,
+                                        positions)
+
+    x, (kch, vch) = jax.lax.scan(body, x, (params["blocks"], kd, vd))
+    x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+    logits = transformer.unembed(params, cfg, x_last)
+    bs = arena_k.shape[2]
+    idx = pos0 + jnp.arange(c)
+    bids = table_row[0, idx // bs]
+    offs = idx % bs
+    # kch (L, 1, C, KV, hd) → (C, L, KV, hd); padded positions land in
+    # writable blocks and are overwritten before anything can attend them
+    arena_k = arena_k.at[bids, :, offs].set(
+        jnp.moveaxis(kch[:, 0], 0, 1).astype(arena_k.dtype))
+    arena_v = arena_v.at[bids, :, offs].set(
+        jnp.moveaxis(vch[:, 0], 0, 1).astype(arena_v.dtype))
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    return arena_k, arena_v, logits, nxt

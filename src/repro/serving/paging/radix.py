@@ -1,0 +1,202 @@
+"""Radix-tree prefix cache over paged KV blocks.
+
+Repeated prompts — chat system preambles, few-shot headers, agent
+scaffolding — dominate production prefill traffic.  The paper's dispatch
+accounting makes the cost concrete: every prefill is a full dispatch
+stream per prompt chunk, so re-running an identical prefix re-pays the
+per-operation overhead that dominates batch-1 serving.  This cache maps
+token-ID prefixes to chains of shared KV blocks so a warm hit skips the
+prefill dispatches for the whole shared span.
+
+Structure: a compressed trie (radix tree) keyed on token IDs.  Each node
+carries
+
+* ``tokens`` — the edge label from its parent (a token segment), and
+* ``chain``  — block ids covering the FULL root→node prefix (the last
+  block may be partially filled when the node ends mid-block).  The node
+  holds one pool reference per chain block, so chains shared between
+  siblings keep their common blocks alive exactly as long as any branch
+  needs them.
+
+``match`` walks token-by-token (node splits happen at arbitrary token
+offsets, so hits are token-granular, not block-granular); the caller
+shares the matched span's full blocks by reference and COW-forks the
+partial boundary block.  ``insert`` stores only FULL blocks (the tail
+partial block stays private to the inserting request, which keeps
+appending into it during decode — cached blocks are immutable).
+``evict_one`` drops the least-recently-used leaf chain; pool refcounts
+guarantee an eviction can only ever free blocks no active request is
+reading.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.paging.allocator import BlockPool, _ceildiv
+
+
+@dataclasses.dataclass
+class _Node:
+    tokens: np.ndarray                    # edge label from parent
+    chain: List[int]                      # blocks covering root→this prefix
+    end: int                              # prefix length at this node
+    parent: Optional["_Node"]
+    children: Dict[int, "_Node"] = dataclasses.field(default_factory=dict)
+    stamp: int = 0                        # LRU clock tick of last touch
+
+
+class RadixPrefixCache:
+    """Longest-prefix KV reuse with LRU eviction of unreferenced chains."""
+
+    def __init__(self, pool: BlockPool, block_size: int) -> None:
+        self.pool = pool
+        self.block_size = block_size
+        self.root = _Node(np.zeros((0,), np.int32), [], 0, None)
+        self._clock = itertools.count(1)
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+        self.inserted_tokens = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def num_nodes(self) -> int:
+        def count(n: _Node) -> int:
+            return 1 + sum(count(c) for c in n.children.values())
+        return count(self.root) - 1          # root excluded
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "hit_tokens": self.hit_tokens,
+            "inserted_tokens": self.inserted_tokens,
+            "evictions": self.evictions, "nodes": self.num_nodes,
+        }
+
+    @staticmethod
+    def _common(a: np.ndarray, b: np.ndarray) -> int:
+        n = min(len(a), len(b))
+        if n == 0:
+            return 0
+        neq = np.nonzero(a[:n] != b[:n])[0]
+        return n if len(neq) == 0 else int(neq[0])
+
+    # ------------------------------------------------------------------
+    def match(self, tokens: Sequence[int]) -> Tuple[int, List[int]]:
+        """Longest cached prefix of ``tokens``.
+
+        Returns ``(matched, chain)`` — the matched token count and the
+        block ids covering it (``ceil(matched / block_size)`` blocks; the
+        last one partial when the match ends mid-block).  Callers cap the
+        query themselves (serving passes ``prompt[:-1]`` so at least one
+        token is always prefilled to produce first-token logits).
+        """
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        stamp = next(self._clock)
+        node, i = self.root, 0
+        node.stamp = stamp
+        while i < len(toks):
+            child = node.children.get(int(toks[i]))
+            if child is None:
+                break
+            c = self._common(child.tokens, toks[i:])
+            if c == 0:
+                break
+            child.stamp = stamp
+            i += c
+            if c < len(child.tokens):      # match ends mid-edge
+                node = child
+                break
+            node = child
+        if i == 0:
+            self.misses += 1
+            return 0, []
+        self.hits += 1
+        self.hit_tokens += i
+        return i, list(node.chain[:_ceildiv(i, self.block_size)])
+
+    # ------------------------------------------------------------------
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int]) -> int:
+        """Cache ``tokens`` (a whole number of blocks) backed by ``blocks``.
+
+        Every NEW node increfs its whole chain; existing nodes are left
+        untouched (their chains already cover the shared span).  Returns
+        the number of nodes created."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        if len(toks) % self.block_size:
+            raise ValueError("insert length must be a multiple of block_size")
+        if len(blocks) != len(toks) // self.block_size:
+            raise ValueError(
+                f"chain covers {len(blocks)} blocks for {len(toks)} tokens")
+        stamp = next(self._clock)
+        created = 0
+        node, i = self.root, 0
+        while i < len(toks):
+            node.stamp = stamp
+            child = node.children.get(int(toks[i]))
+            if child is None:
+                # fresh leaf for the whole remaining suffix
+                leaf = _Node(toks[i:].copy(),
+                             [int(b) for b in blocks], len(toks), node,
+                             stamp=stamp)
+                for b in leaf.chain:
+                    self.pool.incref(b)
+                node.children[int(toks[i])] = leaf
+                created += 1
+                i = len(toks)
+                break
+            c = self._common(child.tokens, toks[i:])
+            if c == len(child.tokens):
+                node, i = child, i + c
+                continue
+            # split the edge at offset c (partial-block splits included:
+            # i + c need not be block-aligned)
+            mid = _Node(child.tokens[:c].copy(),
+                        list(child.chain[:_ceildiv(i + c, self.block_size)]),
+                        i + c, node, stamp=stamp)
+            for b in mid.chain:
+                self.pool.incref(b)
+            created += 1
+            child.tokens = child.tokens[c:]
+            child.parent = mid
+            mid.children[int(child.tokens[0])] = child
+            node.children[int(toks[i])] = mid
+            node, i = mid, i + c
+        node.stamp = stamp
+        self.inserted_tokens += len(toks)
+        return created
+
+    # ------------------------------------------------------------------
+    def _leaves(self) -> List[_Node]:
+        out: List[_Node] = []
+
+        def walk(n: _Node) -> None:
+            if not n.children and n is not self.root:
+                out.append(n)
+            for c in n.children.values():
+                walk(c)
+
+        walk(self.root)
+        return out
+
+    def evict_one(self) -> bool:
+        """Drop the least-recently-used leaf chain; True if one was freed.
+
+        Only the cache's OWN references are dropped — blocks an admitted
+        request adopted keep their request references, so eviction under
+        pressure can never free KV an active slot still reads."""
+        leaves = self._leaves()
+        if not leaves:
+            return False
+        victim = min(leaves, key=lambda n: n.stamp)
+        for b in victim.chain:
+            self.pool.decref(b)
+        victim.parent.children = {
+            t: c for t, c in victim.parent.children.items() if c is not victim}
+        self.evictions += 1
+        return True

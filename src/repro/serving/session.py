@@ -161,17 +161,26 @@ class InferenceSession:
             a.req.stream(i, tok[:, 0].copy())
 
     # -- piecewise execution (the scheduler drives these) ----------------
+    def begin(self, req: ServeRequest) -> _Active:
+        """Open a request WITHOUT running prefill — stamps t0 only.  The
+        chunked-prefill scheduler spreads the prompt over many cycles, so
+        TTFT starts at admission, not at the (much later) final chunk."""
+        return _Active(req=req, state=None, rng=jax.random.PRNGKey(req.seed),
+                       t0=time.perf_counter())
+
+    def first(self, a: _Active, out: StepOutput) -> None:
+        """Consume the prefill output: sample + emit the first token."""
+        a.rng, key = jax.random.split(a.rng)
+        tok = self._select_token(out, a.req, key)
+        a.ttft_s = time.perf_counter() - a.t0
+        self._emit(a, tok)
+
     def start(self, req: ServeRequest) -> _Active:
         """Prefill + first token."""
         prompt = np.atleast_2d(np.asarray(req.prompt, np.int32))
-        t0 = time.perf_counter()
-        state, out = self.backend.prefill(prompt)
-        a = _Active(req=req, state=state, rng=jax.random.PRNGKey(req.seed),
-                    t0=t0)
-        a.rng, key = jax.random.split(a.rng)
-        tok = self._select_token(out, req, key)
-        a.ttft_s = time.perf_counter() - t0
-        self._emit(a, tok)
+        a = self.begin(req)
+        a.state, out = self.backend.prefill(prompt)
+        self.first(a, out)
         return a
 
     def step(self, a: _Active) -> bool:
@@ -264,6 +273,7 @@ class SchedulerStats:
     """
     num_slots: int = 0
     continuous: bool = True
+    kv_layout: str = "dense"
     cycles: int = 0                  # batched decode cycles issued
     admitted: int = 0                # requests prefilled into a slot
     completed: int = 0
@@ -272,6 +282,22 @@ class SchedulerStats:
     occupancy_sum: int = 0           # Σ active slots per cycle
     wall_s: float = 0.0
     queue_waits_s: List[float] = dataclasses.field(default_factory=list)
+    # paged KV / prefix cache / chunked prefill (kv_layout == "paged")
+    prefill_chunks: int = 0          # extend dispatches issued
+    prefix_hits: int = 0             # admissions with a nonzero radix match
+    prefix_hit_tokens: int = 0       # prompt tokens served from shared blocks
+    prompt_tokens: int = 0           # total prompt tokens admitted
+    cow_copies: int = 0              # copy-on-write block forks this run
+    evictions: int = 0               # radix chains evicted under pressure
+    # async (double-buffered) device→host readback
+    overlap_cycles: int = 0          # cycles issued BEFORE the previous
+                                     # cycle's tokens were read back
+    sync_readback_s: float = 0.0     # device_get time on the blocking path
+    overlap_readback_s: float = 0.0  # device_get time overlapped with the
+                                     # next cycle's device work
+    # KV memory utilization (satellite: dense vs paged in one table)
+    kv_bytes_allocated: int = 0
+    kv_bytes_live_peak: int = 0
 
     @property
     def mean_occupancy(self) -> float:
@@ -285,10 +311,19 @@ class SchedulerStats:
     def aggregate_tok_per_s(self) -> float:
         return self.tokens / max(self.wall_s, 1e-12)
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hit_tokens / max(self.prompt_tokens, 1)
+
+    @property
+    def kv_utilization(self) -> float:
+        return self.kv_bytes_live_peak / max(self.kv_bytes_allocated, 1)
+
     def row(self) -> Dict[str, Any]:
         return {
             "num_slots": self.num_slots,
             "continuous": self.continuous,
+            "kv_layout": self.kv_layout,
             "cycles": self.cycles,
             "admitted": self.admitted,
             "completed": self.completed,
@@ -301,6 +336,17 @@ class SchedulerStats:
             "queue_wait_ms_mean": round(
                 1e3 * (sum(self.queue_waits_s)
                        / max(len(self.queue_waits_s), 1)), 2),
+            "prefill_chunks": self.prefill_chunks,
+            "prefix_hit_rate": round(self.prefix_hit_rate, 3),
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "cow_copies": self.cow_copies,
+            "evictions": self.evictions,
+            "overlap_cycles": self.overlap_cycles,
+            "sync_readback_ms": round(1e3 * self.sync_readback_s, 2),
+            "overlap_readback_ms": round(1e3 * self.overlap_readback_s, 2),
+            "kv_bytes_allocated": self.kv_bytes_allocated,
+            "kv_bytes_live_peak": self.kv_bytes_live_peak,
+            "kv_utilization": round(self.kv_utilization, 3),
         }
 
 
@@ -323,17 +369,51 @@ class Scheduler:
     measurement baseline the amortization curve is drawn against.
     Backends that cannot batch (``capabilities.decode_batch`` False) run
     the same per-slot loop through the uniform fallback contract.
+
+    ``kv_layout="paged"`` swaps the dense slot-major pool for the paged
+    block-pool subsystem (``repro.serving.paging``): admission is a radix
+    prefix-cache match (a warm hit skips prefill dispatches for the whole
+    shared span), blocks are claimed lazily as sequences grow, and prefill
+    is **chunked** — ``prefill_chunk`` prompt tokens per cycle interleaved
+    with decode, so one long admission no longer stalls every active slot.
+    The paged batch state (block pool + radix cache) persists across
+    ``run`` calls, so prefix hits accumulate over a scheduler's lifetime.
+
+    ``async_readback`` double-buffers the device→host token readback:
+    while the run is in a steady state (greedy token-readback requests, no
+    stop tokens or stream callbacks, nobody finishing), the NEXT decode
+    cycle is issued from the previous cycle's still-on-device
+    ``next_token`` before that cycle's tokens are fetched, so the host
+    readback + Python bookkeeping overlap device work (the savings land in
+    ``SchedulerStats.overlap_*``).  Token streams are identical either way.
     """
 
     def __init__(self, session: InferenceSession, num_slots: int = 2, *,
-                 continuous: bool = True) -> None:
+                 continuous: bool = True, kv_layout: str = "dense",
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = True, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 async_readback: bool = True) -> None:
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if kv_layout == "paged" and not continuous:
+            raise ValueError("paged KV requires the continuous scheduler")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         self.session = session
         self.num_slots = num_slots
         self.continuous = continuous
+        self.kv_layout = kv_layout
+        self.prefill_chunk = prefill_chunk
+        self.prefix_cache = prefix_cache
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.async_readback = async_readback
         self._queue: List[ServeRequest] = []
         self._submit_t: Dict[str, float] = {}
+        self._bstate: Optional[Dict[str, Any]] = None
         self.last_stats: Optional[SchedulerStats] = None
 
     def submit(self, req: ServeRequest) -> str:
@@ -346,34 +426,137 @@ class Scheduler:
         return len(self._queue)
 
     # ------------------------------------------------------------------
+    def _book_admission(self, a: _Active, st: SchedulerStats) -> None:
+        """Shared admission accounting (dense and paged paths)."""
+        a.queue_wait_s = a.t0 - self._submit_t.pop(a.req.request_id, a.t0)
+        st.admitted += 1
+        st.queue_waits_s.append(a.queue_wait_s)
+
     def _start(self, req: ServeRequest, st: SchedulerStats) -> _Active:
         a = self.session.start(req)
-        a.queue_wait_s = a.t0 - self._submit_t.pop(req.request_id, a.t0)
-        st.admitted += 1
+        self._book_admission(a, st)
         st.tokens += 1                       # prefill emitted the first token
-        st.queue_waits_s.append(a.queue_wait_s)
         return a
 
     def run(self) -> Dict[str, ServeResult]:
         """Drain the queue; returns {request_id: ServeResult}.  Amortization
         and fairness accounting for the run lands in ``self.last_stats``."""
         st = SchedulerStats(num_slots=self.num_slots,
-                            continuous=self.continuous)
+                            continuous=self.continuous,
+                            kv_layout=self.kv_layout)
         backend = self.session.backend
         d0 = backend.dispatch_stats().dispatches
         t0 = time.perf_counter()
-        results = (self._run_continuous(st) if self.continuous
-                   else self._run_sequential(st))
+        if not self.continuous:
+            results = self._run_sequential(st)
+        elif self.kv_layout == "paged":
+            results = self._run_paged(st)
+        else:
+            results = self._run_continuous(st)
         st.wall_s = time.perf_counter() - t0
         st.dispatches = backend.dispatch_stats().dispatches - d0
         st.completed = len(results)
         self.last_stats = st
         return results
 
+    # -- shared cycle plumbing ------------------------------------------
+    @staticmethod
+    def _check_row(req: ServeRequest) -> np.ndarray:
+        prompt = np.atleast_2d(np.asarray(req.prompt, np.int32))
+        if prompt.shape[0] != 1:
+            raise ValueError(
+                "continuous batching schedules one row per slot; got a "
+                f"batch-{prompt.shape[0]} prompt")
+        return prompt
+
+    def _track_kv(self, bstate, st: SchedulerStats) -> None:
+        kv = bstate.get("paged") or bstate.get("kv")
+        if kv is not None:
+            if not st.kv_bytes_allocated:    # constant per pool: compute once
+                st.kv_bytes_allocated = kv.bytes_allocated
+            st.kv_bytes_live_peak = max(st.kv_bytes_live_peak, kv.bytes_live)
+
+    def _issue_cycle(self, bstate, active: Dict[int, "_Active"],
+                     st: SchedulerStats, tokens):
+        """ONE batched decode dispatch for every active slot."""
+        slots = tuple(sorted(active))
+        bstate, out = self.session.backend.decode_batch(bstate, tokens, slots)
+        st.cycles += 1
+        st.occupancy_sum += len(slots)
+        self._track_kv(bstate, st)
+        return bstate, slots, out
+
+    def _host_tokens(self, active: Dict[int, "_Active"]) -> np.ndarray:
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        for s, a in active.items():
+            tokens[s, 0] = a.last_tok[0, 0]
+        return tokens
+
+    def _retire_cycle(self, out: StepOutput, slots, active, results, bstate,
+                      st: SchedulerStats, *, overlapped: bool):
+        """Read a cycle's tokens back and feed each slot its row."""
+        backend = self.session.backend
+        t0 = time.perf_counter()
+        # one host readback per CYCLE (not per slot) in the greedy
+        # token-readback regime: a (num_slots,) int32 vector
+        nxt = (np.asarray(out.next_token, np.int32)
+               if out.next_token is not None else None)
+        dt = time.perf_counter() - t0
+        if overlapped:
+            st.overlap_readback_s += dt
+        else:
+            st.sync_readback_s += dt
+        for s in slots:
+            a = active[s]
+            row = StepOutput(out.logits[s:s + 1],
+                             None if nxt is None else nxt[s:s + 1])
+            st.tokens += 1
+            if self.session.step_row(a, row):
+                results[a.req.request_id] = self.session.finish(a)
+                bstate = backend.release_slot(bstate, s)
+                del active[s]
+        return bstate
+
+    def _async_safe(self, active: Dict[int, "_Active"]) -> bool:
+        """True when deferring the readback cannot change observable
+        behavior: greedy device-argmax tokens only, nothing watching the
+        stream mid-flight, no stop tokens to react to."""
+        return all(a.req.sampler.kind == "greedy"
+                   and a.req.readback == "token"
+                   and not a.req.stop_tokens
+                   and a.req.stream is None for a in active.values())
+
+    def _drain_async(self, bstate, out: StepOutput, slots, active, results,
+                     st: SchedulerStats):
+        """Double-buffered steady state: issue cycle N+1 from cycle N's
+        on-device tokens, THEN read cycle N back — the device computes
+        while the host fetches and books the previous tokens.  Exits (and
+        sync-retires the in-flight cycle) as soon as a slot is about to
+        finish, so every issued cycle's token is emitted — no speculative
+        work is ever discarded."""
+        backend = self.session.backend
+        while (self.async_readback and out.next_token is not None
+               and self._async_safe(active)
+               and all(len(active[s].tokens) + 1
+                       < active[s].req.max_new_tokens for s in slots)):
+            bstate, out_next = backend.decode_batch(bstate, out.next_token,
+                                                    slots)
+            st.cycles += 1
+            st.occupancy_sum += len(slots)
+            st.overlap_cycles += 1
+            self._track_kv(bstate, st)
+            bstate = self._retire_cycle(out, slots, active, results, bstate,
+                                        st, overlapped=True)
+            out = out_next
+        return self._retire_cycle(out, slots, active, results, bstate, st,
+                                  overlapped=False)
+
     # -- continuous batching (the production path) ----------------------
     def _run_continuous(self, st: SchedulerStats) -> Dict[str, ServeResult]:
         backend = self.session.backend
-        bstate = backend.alloc_slots(self.num_slots)
+        if self._bstate is None:
+            self._bstate = backend.alloc_slots(self.num_slots)
+        bstate = self._bstate
         results: Dict[str, ServeResult] = {}
         active: Dict[int, _Active] = {}
         while self._queue or active:
@@ -381,11 +564,7 @@ class Scheduler:
             # between decode cycles — running slots never drain or stall
             while self._queue and len(active) < self.num_slots:
                 req = self._queue.pop(0)
-                if np.atleast_2d(np.asarray(req.prompt)).shape[0] != 1:
-                    raise ValueError(
-                        "continuous batching schedules one row per slot; "
-                        f"got a batch-{np.atleast_2d(np.asarray(req.prompt)).shape[0]} "
-                        "prompt")
+                self._check_row(req)
                 a = self._start(req, st)
                 if a.done:
                     results[a.req.request_id] = self.session.finish(a)
@@ -397,28 +576,81 @@ class Scheduler:
                 active[slot] = a
             if not active:
                 continue
-            # ONE batched decode cycle for every active slot
-            slots = tuple(sorted(active))
-            tokens = np.zeros((self.num_slots, 1), np.int32)
-            for s in slots:
-                tokens[s, 0] = active[s].last_tok[0, 0]
-            bstate, out = backend.decode_batch(bstate, tokens, slots)
-            st.cycles += 1
-            st.occupancy_sum += len(slots)
-            # one host readback per CYCLE (not per slot) in the greedy
-            # token-readback regime: a (num_slots,) int32 vector
-            nxt = (np.asarray(out.next_token, np.int32)
-                   if out.next_token is not None else None)
-            for s in slots:
-                a = active[s]
-                row = StepOutput(
-                    out.logits[s:s + 1],
-                    None if nxt is None else nxt[s:s + 1])
+            bstate, slots, out = self._issue_cycle(
+                bstate, active, st, self._host_tokens(active))
+            bstate = self._drain_async(bstate, out, slots, active, results,
+                                       st)
+        self._bstate = bstate
+        return results
+
+    # -- paged KV + radix prefix cache + chunked prefill -----------------
+    def _run_paged(self, st: SchedulerStats) -> Dict[str, ServeResult]:
+        backend = self.session.backend
+        if not backend.capabilities.paged_kv:
+            raise ValueError(
+                f"backend {backend.capabilities.name!r} has no paged-KV "
+                "support; use kv_layout='dense'")
+        if self._bstate is None:
+            self._bstate = backend.alloc_slots_paged(
+                self.num_slots, block_size=self.block_size,
+                prefill_chunk=self.prefill_chunk,
+                num_blocks=self.num_blocks, prefix_cache=self.prefix_cache)
+        bstate = self._bstate
+        pg = bstate["paged"]
+        radix = bstate["radix"]
+        cow0 = pg.cow_copies
+        ev0 = radix.evictions if radix is not None else 0
+        results: Dict[str, ServeResult] = {}
+        active: Dict[int, _Active] = {}
+        prefilling: Dict[int, _Active] = {}
+        while self._queue or active or prefilling:
+            # admission: radix match + block-table setup only (no compute)
+            while self._queue and len(active) + len(prefilling) < self.num_slots:
+                req = self._queue.pop(0)
+                prompt = self._check_row(req)
+                a = self.session.begin(req)
+                self._book_admission(a, st)
+                slot = min(s for s in range(self.num_slots)
+                           if s not in active and s not in prefilling)
+                info = backend.admit_paged(bstate, slot, prompt)
+                if info.cached:
+                    st.prefix_hits += 1
+                    st.prefix_hit_tokens += info.cached
+                st.prompt_tokens += info.total
+                prefilling[slot] = a
+            # ONE prefill chunk per admitting slot, interleaved with the
+            # decode cycle below — a long prompt admits over many cycles
+            # without ever stalling the slots already decoding
+            for slot in sorted(prefilling):
+                out = backend.prefill_paged_chunk(bstate, slot)
+                st.prefill_chunks += 1
+                if out is None:
+                    continue
+                a = prefilling.pop(slot)
+                self.session.first(a, out)
                 st.tokens += 1
-                if self.session.step_row(a, row):
+                if a.done:
                     results[a.req.request_id] = self.session.finish(a)
-                    bstate = backend.release_slot(bstate, s)
-                    del active[s]
+                    bstate = backend.release_slot(bstate, slot)
+                else:
+                    active[slot] = a
+            self._track_kv(bstate, st)
+            if not active:
+                continue
+            bstate, slots, out = self._issue_cycle(
+                bstate, active, st, self._host_tokens(active))
+            # stay synchronous while prompts are mid-prefill so their next
+            # chunk is never delayed behind a deferred readback
+            if prefilling or (self._queue
+                              and len(active) < self.num_slots):
+                bstate = self._retire_cycle(out, slots, active, results,
+                                            bstate, st, overlapped=False)
+            else:
+                bstate = self._drain_async(bstate, out, slots, active,
+                                           results, st)
+        st.cow_copies = pg.cow_copies - cow0
+        st.evictions = (radix.evictions - ev0) if radix is not None else 0
+        self._bstate = bstate
         return results
 
     # -- sequential baseline (pre-batching behavior) ---------------------
