@@ -26,9 +26,11 @@ import numpy as np
 
 from benchmarks.common import print_table, save_results
 from repro.configs.bench import BENCH_05B
+from repro.core.graphs import LEVELS, build_decode_graph
 from repro.models import build_model
 from repro.serving import (InferenceSession, Scheduler, ServeRequest,
                            create_backend)
+from repro.serving.backends.graph import GRAPH_MODES
 
 BATCHES = (1, 2, 4, 8)
 SLOT_SWEEP = (1, 2, 4, 8)
@@ -159,6 +161,7 @@ def run_serving(quick: bool = False, tokens: int = 16,
                        "disp_per_tok_continuous", "disp_per_tok_sequential",
                        "mean_occupancy"])
     payload = {
+        "quick": quick,
         "rows": rows,
         "gate_slots": GATE_SLOTS,
         "gate_mode": modes[0],
@@ -184,7 +187,8 @@ def run_serving(quick: bool = False, tokens: int = 16,
 # (BENCH_paging.json + CI gate)
 # ---------------------------------------------------------------------------
 
-def run_prefix_reuse(quick: bool = False, gate: bool = False) -> Dict:
+def run_prefix_reuse(quick: bool = False, gate: bool = False,
+                     backend_name: str = "model") -> Dict:
     """N requests sharing a long system prompt through the paged scheduler.
 
     Protocol: serve the same request sequence twice through one-slot paged
@@ -194,9 +198,17 @@ def run_prefix_reuse(quick: bool = False, gate: bool = False) -> Dict:
     every request.  Reported per run: prefix hit rate, prefill chunk
     dispatches, TTFT, COW forks, and the dense-vs-paged KV memory table.
 
-    ``gate`` asserts the paper-level claims CI rides on: a warm hit
-    performs ZERO prefill dispatches for the shared span (warm chunks ==
-    suffix-only chunks) and warm TTFT ≤ cold TTFT.
+    ``backend_name`` selects the serving backend: ``model`` (the
+    single-executable path, ``BENCH_paging.json``) or a dispatch-graph
+    level like ``F3`` (the dispatch-MEASURED path,
+    ``BENCH_paging_graph.json``) — for graph backends the payload also
+    records the paged-vs-``slot_pos`` decode dispatch counts, which
+    ``gate`` asserts are IDENTICAL (paging must be free in the per-op
+    accounting).
+
+    ``gate`` additionally asserts the paper-level claims CI rides on: a
+    warm hit performs ZERO prefill dispatches for the shared span (warm
+    chunks == suffix-only chunks) and warm TTFT ≤ cold TTFT.
     """
     n_req = 4 if quick else 8
     tokens = 4 if quick else 8
@@ -213,8 +225,10 @@ def run_prefix_reuse(quick: bool = False, gate: bool = False) -> Dict:
         [system, rng.integers(0, BENCH_05B.vocab_size, size=suffix_len)]
     ).astype(np.int32).reshape(1, -1) for _ in range(n_req)]
 
-    backend = create_backend("model", model, params, batch=1,
+    backend = create_backend(backend_name, model, params, batch=1,
                              max_len=max_len)
+    if not backend.capabilities.paged_kv:
+        raise SystemExit(f"backend {backend_name!r} has no paged-KV support")
     session = InferenceSession(backend)
     refs = [session.run(ServeRequest(prompt=p, max_new_tokens=tokens))
             .tokens for p in prompts]
@@ -265,8 +279,9 @@ def run_prefix_reuse(quick: bool = False, gate: bool = False) -> Dict:
         "prefill_chunks_per_req": warm[0]["prefill_chunks"],
         "hit_tokens": warm[0]["hit_tokens"],
     }]
-    print_table("Prefix reuse: radix cache vs cold prefill (bench-0.5b, "
-                f"shared {sys_len}-token system prompt, parity asserted)",
+    print_table(f"Prefix reuse: radix cache vs cold prefill ({backend_name} "
+                f"backend, bench-0.5b, shared {sys_len}-token system "
+                "prompt, parity asserted)",
                 rows, ["mode", "requests", "ttft_ms",
                        "prefill_chunks_per_req", "hit_tokens"])
     saved = cold_chunks - warm[0]["prefill_chunks"]
@@ -292,6 +307,8 @@ def run_prefix_reuse(quick: bool = False, gate: bool = False) -> Dict:
                 ["layout", "kv_bytes_allocated", "kv_bytes_live_peak",
                  "utilization"])
     payload = {
+        "backend": backend_name,
+        "quick": quick,
         "rows": rows,
         "system_prompt_tokens": sys_len,
         "prompt_tokens": plen,
@@ -311,20 +328,52 @@ def run_prefix_reuse(quick: bool = False, gate: bool = False) -> Dict:
             warm[0]["prefill_chunks"] == warm_chunks_expected,
         "gate_warm_ttft_le_cold": ttft_warm <= ttft_cold,
     }
-    save_results("paging", payload)
+    ok_flat = True
+    if backend_name in GRAPH_MODES:
+        # the dispatch-measured regime: the paged decode graph must spend
+        # exactly the dispatches of the dense slot_pos graph — this is the
+        # paper's per-operation accounting, so paging has to be free here
+        fusion = LEVELS["F0" if backend_name == "FULL" else backend_name]
+        g_dense = build_decode_graph(params, BENCH_05B, batch=1,
+                                     max_len=max_len, fusion=fusion,
+                                     slot_pos=True)
+        g_paged = build_decode_graph(params, BENCH_05B, batch=1,
+                                     max_len=max_len, fusion=fusion,
+                                     paged=True, block_size=block)
+        payload["decode_dispatches_per_token_slot_pos"] = \
+            g_dense.num_dispatches()
+        payload["decode_dispatches_per_token_paged"] = \
+            g_paged.num_dispatches()
+        ok_flat = g_paged.num_dispatches() == g_dense.num_dispatches()
+        payload["gate_dispatches_per_token_flat"] = ok_flat
+        print(f"  → paged decode dispatches/token [{backend_name}]: "
+              f"{g_paged.num_dispatches()} paged vs "
+              f"{g_dense.num_dispatches()} dense slot_pos — "
+              f"{'FLAT' if ok_flat else 'REGRESSED'}")
+    # one trajectory file per backend family: model → BENCH_paging.json,
+    # graph levels → BENCH_paging_graph.json, anything else (e.g. dist)
+    # its own name — never clobber another backend's committed baseline
+    if backend_name == "model":
+        bench_name = "paging"
+    elif backend_name in GRAPH_MODES:
+        bench_name = "paging_graph"
+    else:
+        bench_name = f"paging_{backend_name}"
+    save_results(bench_name, payload)
     if gate:
         ok_disp = payload["gate_zero_shared_span_prefill"]
         ok_ttft = payload["gate_warm_ttft_le_cold"]
-        print(f"  → paging gate: shared-span prefill dispatches "
-              f"{'ZERO' if ok_disp else 'NONZERO'}; warm TTFT "
+        print(f"  → paging gate [{backend_name}]: shared-span prefill "
+              f"dispatches {'ZERO' if ok_disp else 'NONZERO'}; warm TTFT "
               f"{ttft_warm:.1f} ms vs cold {ttft_cold:.1f} ms — "
-              f"{'PASS' if ok_disp and ok_ttft else 'FAIL'}")
-        if not (ok_disp and ok_ttft):
+              f"{'PASS' if ok_disp and ok_ttft and ok_flat else 'FAIL'}")
+        if not (ok_disp and ok_ttft and ok_flat):
             raise SystemExit(
                 f"prefix-reuse gate failed: chunks "
                 f"{warm[0]['prefill_chunks']} (expected "
                 f"{warm_chunks_expected}), ttft warm {ttft_warm:.2f} "
-                f"vs cold {ttft_cold:.2f}")
+                f"vs cold {ttft_cold:.2f}, dispatches/token flat: "
+                f"{ok_flat}")
     return payload
 
 
@@ -339,13 +388,20 @@ if __name__ == "__main__":
                          "1-slot sequential (CI regression gate)")
     ap.add_argument("--prefix-reuse", action="store_true",
                     help="run the radix prefix-cache reuse benchmark "
-                         "(BENCH_paging.json)")
+                         "(BENCH_paging.json / BENCH_paging_graph.json)")
     ap.add_argument("--gate-paging", action="store_true",
                     help="fail unless a warm radix hit skips the shared "
-                         "span's prefill dispatches and warm TTFT ≤ cold")
+                         "span's prefill dispatches, warm TTFT ≤ cold, and "
+                         "(graph backends) paged decode dispatches/token "
+                         "== dense slot_pos")
+    ap.add_argument("--backend", default="model",
+                    help="prefix-reuse backend: model | F0..F4 | FULL | "
+                         "dist (graph levels emit BENCH_paging_graph.json "
+                         "with the dispatch-count gate)")
     args = ap.parse_args()
     if args.prefix_reuse or args.gate_paging:
-        run_prefix_reuse(quick=args.quick, gate=args.gate_paging)
+        run_prefix_reuse(quick=args.quick, gate=args.gate_paging,
+                         backend_name=args.backend)
     elif args.serving_only or args.gate > 0:
         run_serving(quick=args.quick, gate=args.gate)
     else:

@@ -77,6 +77,38 @@ np.testing.assert_array_equal(results["warm"].tokens, refs[0])
 assert sched_p.last_stats.prefix_hit_tokens > 0, "radix cache never hit"
 print("OK: paged + chunked prefill matches dense exactly; warm prompt "
       "hit the prefix cache")
+
+# the dispatch-measured path: the F3 graph backend serves the same paged
+# workload with the SAME dispatch count per decode cycle as dense slot_pos
+backend_g = create_backend("F3", model, params, batch=1, max_len=24)
+session_g = InferenceSession(backend_g)
+refs_g = [session_g.run(ServeRequest(prompt=p, max_new_tokens=8)).tokens
+          for p in prompts]
+sched_g = Scheduler(session_g, num_slots=4, kv_layout="paged",
+                    prefill_chunk=3, block_size=4)
+ids = [sched_g.submit(ServeRequest(prompt=p, max_new_tokens=8,
+                                   request_id=f"g{i}"))
+       for i, p in enumerate(prompts)]
+results = sched_g.run()
+for i, rid in enumerate(ids):
+    np.testing.assert_array_equal(results[rid].tokens, refs_g[i])
+from repro.core.graphs import LEVELS, build_decode_graph
+g_dense = build_decode_graph(params, BENCH_05B, batch=4, max_len=24,
+                             fusion=LEVELS["F3"], slot_pos=True)
+assert sched_g._bstate["decode_eng"].graph.num_dispatches() \
+    == g_dense.num_dispatches(), "paged graph dispatch count drifted"
+# a SECOND TURN replaying prompt + completion reuses generated blocks
+turn2 = np.concatenate([prompts[0][0], results["g0"].tokens[0]])
+turn2 = turn2.reshape(1, -1).astype(np.int32)
+ref2 = session_g.run(ServeRequest(prompt=turn2, max_new_tokens=4)).tokens
+rid = sched_g.submit(ServeRequest(prompt=turn2, max_new_tokens=4,
+                                  request_id="turn2"))
+np.testing.assert_array_equal(sched_g.run()[rid].tokens, ref2)
+hit = sched_g.last_stats.prefix_hit_tokens
+assert hit > prompts[0].shape[1], "generated tokens were not reused"
+print(f"OK: F3 graph backend serves paged at the dense dispatch count; "
+      f"turn-2 reused {hit} cached tokens (prompt was "
+      f"{prompts[0].shape[1]})")
 EOF
 fi
 

@@ -127,7 +127,8 @@ def build_decode_graph(params: Dict[str, Any], cfg: ModelConfig, *,
                        fusion: FusionSpec = FusionSpec(),
                        slot_pos: bool = False, paged: bool = False,
                        block_size: int = 16,
-                       num_blocks: Optional[int] = None) -> OpGraph:
+                       num_blocks: Optional[int] = None,
+                       table_width: Optional[int] = None) -> OpGraph:
     """One autoregressive decode step as an explicit dispatch stream.
 
     Inputs:  tokens (B,1) int32, pos () int32, k_cache/v_cache per layer.
@@ -151,7 +152,9 @@ def build_decode_graph(params: Dict[str, Any], cfg: ModelConfig, *,
     eps = cfg.rms_eps
     if paged:
         slot_pos = True
-        width = -(-max_len // block_size)
+        # block tables may cover a little more than max_len (chunked-
+        # prefill slack); the engine's table input must match the pool's
+        width = table_width or -(-max_len // block_size)
         if num_blocks is None:
             num_blocks = batch * width + 1
     g = GraphBuilder()
@@ -379,3 +382,132 @@ def build_prefill_graph(params: Dict[str, Any], cfg: ModelConfig, *,
     g.output("logits", logits)
     return g.build(kind="prefill", arch=cfg.name, fusion=fusion.level,
                    batch=batch, prompt_len=s, max_len=max_len)
+
+
+def build_extend_graph(params: Dict[str, Any], cfg: ModelConfig, *,
+                       chunk: int, max_len: int,
+                       fusion: FusionSpec = FusionSpec(),
+                       block_size: int = 16, num_blocks: int,
+                       table_width: int) -> OpGraph:
+    """One chunked-prefill step for ONE slot as an explicit dispatch stream.
+
+    The paged twin of ``build_prefill_graph``: ``chunk`` prompt tokens
+    (padded; ``valid`` real) starting at absolute position ``pos0`` run
+    against everything the slot's block table already covers — a radix-hit
+    admission starts past the shared span, so cached positions are never
+    re-dispatched.  K/V is scattered into the slot's blocks
+    (``cache_update_span_paged``) and attention gathers through the table
+    (``sdpa_extend_paged``), so chunked prefill in the graph regime keeps
+    honest per-operation dispatch accounting.  One compiled stream serves
+    every chunk of that width (inputs: tokens, pos0, valid, block_table,
+    per-layer arenas; outputs: updated arenas + last-valid-position
+    logits/next_token).
+    """
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    eps = cfg.rms_eps
+    c = chunk
+    g = GraphBuilder()
+    tokens = g.input("tokens", (1, c), jnp.int32)
+    pos0 = g.input("pos0", (), jnp.int32)
+    valid = g.input("valid", (), jnp.int32)
+    btab = g.input("block_table", (1, table_width), jnp.int32)
+    caches = []
+    for i in range(cfg.num_layers):
+        caches.append((
+            g.input(f"k_arena_{i}", (num_blocks, block_size,
+                                     cfg.num_kv_heads, hd),
+                    jnp.dtype(cfg.dtype)),
+            g.input(f"v_arena_{i}", (num_blocks, block_size,
+                                     cfg.num_kv_heads, hd),
+                    jnp.dtype(cfg.dtype)),
+        ))
+    cos_t, sin_t = _rope_tables(cfg, max_len)
+
+    x = g.op("embed", _np(params["embed"]), tokens, tag="embed")
+    for i in range(cfg.num_layers):
+        w = _layer_weights(params, i)
+        t = f"layer{i}"
+        xn = _emit_rmsnorm(g, x, w["attn_norm"], eps, fusion.rmsnorm,
+                           f"{t}/attn_norm")
+        wa = w["attn"]
+        has_bias = "bq" in wa
+        q = g.op("matmul", xn, wa["wq"], tag=f"{t}/q_proj")
+        if has_bias:
+            q = g.op("add", q, wa["bq"], tag=f"{t}/q_bias")
+        if fusion.kv_proj:
+            wkv = np.concatenate([wa["wk"], wa["wv"]], axis=-1)
+            if has_bias:
+                bkv = np.concatenate([wa["bk"], wa["bv"]])
+                kvp = g.op("fused_kv", xn, wkv, bkv, tag=f"{t}/kv_proj")
+            else:
+                kvp = g.op("fused_kv_nobias", xn, wkv, tag=f"{t}/kv_proj")
+            k = g.op("slice_last", kvp, start=0, size=nkv, tag=t)
+            v = g.op("slice_last", kvp, start=nkv, size=nkv, tag=t)
+        else:
+            k = g.op("matmul", xn, wa["wk"], tag=f"{t}/k_proj")
+            v = g.op("matmul", xn, wa["wv"], tag=f"{t}/v_proj")
+            if has_bias:
+                k = g.op("add", k, wa["bk"], tag=f"{t}/k_bias")
+                v = g.op("add", v, wa["bv"], tag=f"{t}/v_bias")
+        q = g.op("reshape", q, shape=(1, c, cfg.num_heads, hd), tag=t)
+        k = g.op("reshape", k, shape=(1, c, cfg.num_kv_heads, hd), tag=t)
+        v = g.op("reshape", v, shape=(1, c, cfg.num_kv_heads, hd), tag=t)
+        if cfg.qk_norm:
+            q = _emit_rmsnorm(g, q, wa["q_norm"], eps, fusion.rmsnorm,
+                              f"{t}/q_norm")
+            k = _emit_rmsnorm(g, k, wa["k_norm"], eps, fusion.rmsnorm,
+                              f"{t}/k_norm")
+        if i == 0:
+            # chunk-absolute rotary positions: pos0 + [0, c)
+            positions = g.op("add", pos0, np.arange(c, dtype=np.int32),
+                             tag="positions")
+            cos = g.op("gather_rows", cos_t, positions, tag="rope_cos")
+            sin = g.op("gather_rows", sin_t, positions, tag="rope_sin")
+            cos = g.op("reshape", cos, shape=(c, 1, hd), tag="rope_cos")
+            sin = g.op("reshape", sin, shape=(c, 1, hd), tag="rope_sin")
+        q = _emit_rope(g, q, cos, sin, f"{t}/rope_q")
+        k = _emit_rope(g, k, cos, sin, f"{t}/rope_k")
+        k = g.op("cast", k, dtype=cfg.dtype, tag=t)
+        v = g.op("cast", v, dtype=cfg.dtype, tag=t)
+        kc, vc = caches[i]
+        kc = g.op("cache_update_span_paged", kc, k, btab, pos0, donate=(0,),
+                  block_size=block_size, tag=f"{t}/k_cache")
+        vc = g.op("cache_update_span_paged", vc, v, btab, pos0, donate=(0,),
+                  block_size=block_size, tag=f"{t}/v_cache")
+        g.output(f"k_arena_{i}", kc)
+        g.output(f"v_arena_{i}", vc)
+        o = g.op("sdpa_extend_paged", q, kc, vc, btab, pos0, tag=f"{t}/sdpa")
+        o = g.op("reshape", o, shape=(1, c, nq), tag=t)
+        o = g.op("matmul", o, wa["wo"], tag=f"{t}/o_proj")
+        x = g.op("add", x, o, tag=f"{t}/resid1")
+        xn = _emit_rmsnorm(g, x, w["ffn_norm"], eps, fusion.rmsnorm,
+                           f"{t}/ffn_norm")
+        if cfg.moe is not None:
+            f = _emit_moe_ffn(g, cfg, xn, w, fusion.mlp, f"{t}/moe")
+        elif fusion.mlp:
+            h = g.op("fused_mlp", xn, w["ffn"]["w_gate"], w["ffn"]["w_up"],
+                     tag=f"{t}/mlp_fused")
+            f = g.op("matmul", h, w["ffn"]["w_down"], tag=f"{t}/mlp_down")
+        else:
+            gate = g.op("matmul", xn, w["ffn"]["w_gate"], tag=f"{t}/mlp_gate")
+            up = g.op("matmul", xn, w["ffn"]["w_up"], tag=f"{t}/mlp_up")
+            sl = g.op("silu", gate, tag=f"{t}/mlp_silu")
+            h = g.op("mul", sl, up, tag=f"{t}/mlp_mul")
+            f = g.op("matmul", h, w["ffn"]["w_down"], tag=f"{t}/mlp_down")
+        x = g.op("add", x, f, tag=f"{t}/resid2")
+
+    # logits at the LAST VALID chunk position (padded tails are dead)
+    vm1 = g.op("add", valid, np.int32(-1), tag="last_valid")
+    xl = g.op("slice_seq_at", x, vm1, tag="last_token")
+    xl = _emit_rmsnorm(g, xl, _np(params["final_norm"]), eps, fusion.rmsnorm,
+                       "final_norm")
+    head = (_np(params["embed"]).T if cfg.tie_embeddings
+            else _np(params["lm_head"]))
+    logits = g.op("matmul", xl, head, tag="lm_head")
+    nxt = g.op("argmax", logits, tag="argmax")
+    g.output("next_token", nxt)
+    g.output("logits", logits)
+    return g.build(kind="extend", arch=cfg.name, fusion=fusion.level,
+                   chunk=c, max_len=max_len, paged=True,
+                   block_size=block_size)

@@ -61,6 +61,34 @@ def _cache_update_paged(arena, val, table, pos, *, block_size):
         val[:, 0].astype(arena.dtype))
 
 
+def _sdpa_extend_paged(q, k_arena, v_arena, table, pos0):
+    """Chunked-prefill attention through one slot's block table.
+
+    ``q`` (1, C, H, hd) is a chunk starting at absolute position ``pos0``;
+    the arenas already hold the chunk's K/V (scattered by
+    ``cache_update_span_paged`` just before).  Like ``sdpa_paged``, the
+    block gather folds into the attention op so the paged extend graph
+    spends exactly one dispatch where the dense prefill graph spends one.
+    """
+    from repro.models import layers as L
+    kd = k_arena[table]                       # (1, W, Bs, KV, hd)
+    b, w, bs = kd.shape[:3]
+    kd = kd.reshape(b, w * bs, *kd.shape[3:])
+    vd = v_arena[table].reshape(b, w * bs, *kd.shape[2:])
+    return L.causal_attention(q, kd, vd, q_offset=pos0)
+
+
+def _cache_update_span_paged(arena, val, table, pos0, *, block_size):
+    """Scatter one chunk's K/V (1, C, KV, hd) into its slot's blocks at
+    absolute positions [pos0, pos0+C).  Padded chunk-tail positions land in
+    writable blocks and are overwritten before anything can attend them —
+    the same don't-care contract as the jitted ``extend_step_paged``."""
+    c = val.shape[1]
+    idx = pos0 + jnp.arange(c)
+    bids = table[0, idx // block_size]
+    return arena.at[bids, idx % block_size].set(val[0].astype(arena.dtype))
+
+
 # Fused-op backend: "xla" (jnp bodies fused by XLA — the wall-clock path on
 # the CPU host) or "pallas" (the hand-written TPU kernels from
 # repro.kernels — the production TPU path; interpret-mode on CPU, so used
@@ -151,6 +179,13 @@ OPS: Dict[str, Callable] = {
     "sdpa_prefill": _sdpa_prefill,
     "sdpa_paged": _sdpa_paged,
     "cache_update_paged": _cache_update_paged,
+    "sdpa_extend_paged": _sdpa_extend_paged,
+    "cache_update_span_paged": _cache_update_span_paged,
+    # dynamic (traced-index) slice of one sequence position — the extend
+    # graph's "logits at the last VALID chunk position" read; a real
+    # gather dispatch, unlike the static slice_seq_last shape op
+    "slice_seq_at": lambda x, i: jax.lax.dynamic_slice_in_dim(x, i, 1,
+                                                              axis=1),
     # --- fused ops (Table 5 / §6.1) ------------------------------------
     "fused_rmsnorm": _fused_rmsnorm,
     "fused_mlp": _fused_mlp,
@@ -178,11 +213,13 @@ TAXONOMY: Dict[str, str] = {
     "mul": "multiply",
     "add": "add", "add_eps": "add",
     "sdpa": "sdpa", "sdpa_prefill": "sdpa", "sdpa_paged": "sdpa",
+    "sdpa_extend_paged": "sdpa",
     "silu": "silu", "gelu": "silu",
     "pow": "rmsnorm_comp", "mean": "rmsnorm_comp", "rsqrt": "rmsnorm_comp",
     "fused_rmsnorm": "rmsnorm_comp",
     "concat": "concat", "cache_update": "concat",
     "cache_update_rows": "concat", "cache_update_paged": "concat",
+    "cache_update_span_paged": "concat",
 }
 _OTHER = "other"
 

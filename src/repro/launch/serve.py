@@ -59,6 +59,9 @@ def main() -> None:
                          "prefill dispatches for the shared span)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged only: KV block size in tokens")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged only: block-pool size (default: every slot "
+                         "full + two spare prefix chains)")
     ap.add_argument("--out", default=None, help="write JSON rows here")
     args = ap.parse_args()
 
@@ -108,7 +111,8 @@ def main() -> None:
                               kv_layout=args.kv_layout,
                               prefill_chunk=args.prefill_chunk,
                               prefix_cache=args.prefix_cache,
-                              block_size=args.block_size)
+                              block_size=args.block_size,
+                              num_blocks=args.num_blocks)
             for i in range(n_req):
                 p = rng.integers(0, cfg.vocab_size,
                                  size=(1, args.prompt_len)).astype(np.int32)

@@ -23,11 +23,13 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import time
 from typing import (Any, Callable, Dict, NamedTuple, Optional, Sequence,
                     Tuple)
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.engine import RunStats
 
@@ -163,8 +165,19 @@ class ExecutionBackend(abc.ABC):
         bstate["slots"][slot] = state
         return bstate
 
-    def release_slot(self, bstate: BatchState, slot: int) -> BatchState:
-        """Free ``slot`` (request finished or evicted)."""
+    def release_slot(self, bstate: BatchState, slot: int,
+                     tokens=None) -> BatchState:
+        """Free ``slot`` (request finished or evicted).
+
+        ``tokens`` is the request's REALIZED sequence (prompt + generated,
+        host ints) when the caller has it; paged backends use it to insert
+        the prompt+completion chain into the radix prefix cache before the
+        slot's block references drop, so a follow-up turn that replays the
+        conversation gets a warm hit over the generated span too.
+        """
+        if "paged" in bstate:
+            self._release_paged(bstate, slot, tokens)
+            return bstate
         bstate["slots"].pop(slot, None)
         return bstate
 
@@ -209,6 +222,13 @@ class ExecutionBackend(abc.ABC):
     # ``prefill_paged_chunk`` calls the scheduler interleaves with decode
     # cycles, and ``decode_batch``/``release_slot`` accept the paged
     # ``bstate`` transparently.  Dense remains the fallback layout.
+    #
+    # The paged ``bstate`` structure is uniform across backends —
+    # ``{"num_slots", "paged": PagedKVCache, "radix", "chunk", "meta"}`` —
+    # so admission and release are pure host bookkeeping implemented HERE
+    # once; backends own only the device work (``alloc_slots_paged``
+    # builds the pool in the backend's arena layout, and
+    # ``prefill_paged_chunk``/``decode_batch`` run the dispatches).
 
     def alloc_slots_paged(self, num_slots: int, *, block_size: int = 16,
                           prefill_chunk: Optional[int] = None,
@@ -218,13 +238,49 @@ class ExecutionBackend(abc.ABC):
         raise NotImplementedError(
             f"{self.capabilities.name!r} has no paged-KV support")
 
+    def _make_paged_state(self, num_slots: int, *, block_size: int,
+                          prefill_chunk: Optional[int],
+                          num_blocks: Optional[int], prefix_cache: bool,
+                          layout: str = "stacked") -> BatchState:
+        """Construct the uniform paged bstate — pool + radix + chunk/meta
+        bookkeeping.  The chunk-slack rule lives here ONCE: padded final
+        chunks write up to chunk-1 tokens past the prompt, so tables get
+        that much extra width.  Backends layer their device specifics on
+        top (graph: engines over a ``layout="graph"`` arena; dist:
+        stage-resharding the arena)."""
+        from repro.serving.paging import PagedKVCache, RadixPrefixCache
+        slack = max(0, (prefill_chunk or 1) - 1)
+        pg = PagedKVCache(self.cfg, num_slots, self.max_len,
+                          block_size=block_size, num_blocks=num_blocks,
+                          table_slack=slack, layout=layout)
+        radix = RadixPrefixCache(pg.pool, block_size) if prefix_cache \
+            else None
+        pg.radix = radix
+        return {"num_slots": num_slots, "paged": pg, "radix": radix,
+                "chunk": prefill_chunk, "meta": {}}
+
     def admit_paged(self, bstate: BatchState, slot: int, prompt
                     ) -> "PagedAdmit":
         """Bind a prompt to ``slot``: radix prefix match, shared-block
         adoption (COW at a partial boundary), chunk cursor setup.  Cheap —
         the prefill compute happens in ``prefill_paged_chunk``."""
-        raise NotImplementedError(
-            f"{self.capabilities.name!r} has no paged-KV support")
+        if "paged" not in bstate:
+            raise NotImplementedError(
+                f"{self.capabilities.name!r} has no paged-KV support")
+        pg = bstate["paged"]
+        radix = bstate["radix"]
+        toks = np.asarray(prompt, np.int32).reshape(-1)
+        pg.allocate(slot)
+        # cap the match at plen-1: the last prompt token always runs
+        # through the extend path so first-token logits exist
+        matched, blocks = (radix.match(toks[:-1]) if radix is not None
+                           else (0, []))
+        copies = pg.adopt_prefix(slot, matched, blocks)
+        if copies:
+            self._record(RunStats(wall_s=0.0, dispatches=copies, shape_ops=0,
+                                  sync_mode="none"))
+        bstate["meta"][slot] = {"prompt": toks, "cursor": matched}
+        return PagedAdmit(cached=matched, total=len(toks))
 
     def prefill_paged_chunk(self, bstate: BatchState, slot: int
                             ) -> Optional[StepOutput]:
@@ -233,6 +289,94 @@ class ExecutionBackend(abc.ABC):
         finished prefix is inserted into the radix cache), else None."""
         raise NotImplementedError(
             f"{self.capabilities.name!r} has no paged-KV support")
+
+    def _prefill_chunk_with(self, bstate: BatchState, slot: int, run_extend
+                            ) -> Optional[StepOutput]:
+        """Shared chunked-prefill driver.
+
+        The chunk-cursor bookkeeping, padded-buffer prep, COW block
+        preparation and radix insert-on-completion are identical across
+        every paged backend and live HERE; only the executable differs.
+        ``run_extend(bstate, slot, buf, cur, valid, copies) → (logits,
+        next_token)`` runs one extend step and owns its arena adoption and
+        dispatch accounting — ``_extend_with_jit`` wraps the common
+        array-signature jit (model/dist), the graph backend supplies its
+        engine-driven executor.
+        """
+        pg = bstate["paged"]
+        meta = bstate["meta"][slot]
+        toks, cur = meta["prompt"], meta["cursor"]
+        plen = len(toks)
+        c = bstate["chunk"] or (plen - cur)
+        valid = min(c, plen - cur)
+        buf = np.zeros((1, c), np.int32)
+        buf[0, :valid] = toks[cur:cur + valid]
+        copies = pg.ensure_writable(slot, cur, cur + c)
+        logits, nxt = run_extend(bstate, slot, buf, cur, valid, copies)
+        meta["cursor"] = cur + valid
+        pg.pos[slot] = cur + valid
+        if meta["cursor"] < plen:
+            return None
+        self._finish_paged_prefill(bstate, slot)
+        return StepOutput(logits, nxt)
+
+    def _extend_with_jit(self, fn):
+        """Executor for ``_prefill_chunk_with`` over the shared jitted
+        signature ``fn(params, arena_k, arena_v, table_row, pos0, valid,
+        tokens) → (arena_k', arena_v', logits, next_token)`` (the
+        single-device extend or the dist pipeline extend)."""
+        def run(bstate, slot, buf, cur, valid, copies):
+            pg = bstate["paged"]
+            t0 = time.perf_counter()
+            ak, av, logits, nxt = fn(
+                self.params, pg.pool.arena_k, pg.pool.arena_v,
+                jnp.asarray(pg.table[slot:slot + 1]), jnp.int32(cur),
+                jnp.int32(valid), jnp.asarray(buf))
+            enq = time.perf_counter() - t0
+            self._record(RunStats(wall_s=enq, dispatches=1 + copies,
+                                  shape_ops=0, sync_mode="none",
+                                  enqueue_s=enq))
+            pg.pool.set_arena(ak, av)
+            return logits, nxt
+        return run
+
+    def _finish_paged_prefill(self, bstate: BatchState, slot: int) -> None:
+        """Shared end-of-prompt bookkeeping: cache the prompt's FULL blocks
+        in the radix tree (the partial tail block stays private — decode
+        keeps appending into it)."""
+        pg = bstate["paged"]
+        radix = bstate["radix"]
+        if radix is None:
+            return
+        toks = bstate["meta"][slot]["prompt"]
+        nfull = len(toks) // pg.block_size
+        if nfull:
+            radix.insert(toks[:nfull * pg.block_size],
+                         pg.chain(slot, nfull * pg.block_size))
+
+    def _release_paged(self, bstate: BatchState, slot: int, tokens) -> None:
+        """Paged release: insert the prompt+GENERATED chain, then free.
+
+        The slot's cached KV covers positions [0, pos) — the prompt plus
+        every generated token that was fed back through decode (the final
+        sampled token never was: that is the sampling boundary, so the
+        insert stops exactly there and a later adopter COW-forks the
+        partial boundary block as usual).  Inserting BEFORE the free keeps
+        the chain's blocks referenced by the radix tree when the slot's own
+        references drop, so multi-turn follow-ups replaying prompt +
+        completion hit warm.
+        """
+        pg = bstate["paged"]
+        radix = bstate["radix"]
+        if radix is not None and tokens is not None:
+            covered = int(pg.pos[slot])
+            seq = np.asarray(tokens, np.int32).reshape(-1)[:covered]
+            nfull = len(seq) // pg.block_size
+            if nfull:
+                radix.insert(seq[:nfull * pg.block_size],
+                             pg.chain(slot, nfull * pg.block_size))
+        pg.free(slot)
+        bstate["meta"].pop(slot, None)
 
     # -- uniform instrumentation ------------------------------------------
     def __init__(self) -> None:

@@ -16,6 +16,16 @@ from; ``pipeline_stats()`` reports it next to the uniform
 (1 dispatch/token), so multi-device serving keeps the §9.2 dispatch
 regime.
 
+Paged serving: the dense per-slot-loop fallback could not batch because
+the pipeline's cache write was compiled around ONE shared scalar position
+— but the paged layout's cache write is a per-row block-table scatter, so
+per-slot positions batch fine.  ``alloc_slots_paged`` therefore shards
+the block arena's LAYER axis over the mesh (each stage owns its
+layer-slice of every block; admission/eviction/refcounts stay host-side
+and global), and one paged decode cycle advances EVERY active slot
+through a single pipelined executable — multi-device serving joins the
+continuous-batching amortization regime.
+
 The mesh is built over the host's devices (force a fleet with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the first
 jax import); on one device it degenerates to a 1-stage pipeline running
@@ -24,7 +34,7 @@ the identical code path.
 from __future__ import annotations
 
 import time
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +46,9 @@ from repro.core.engine import RunStats
 from repro.dist.pipeline import PipelineStats, ring_perm
 from repro.models import transformer
 from repro.models.transformer import CHUNKED_ATTENTION_MIN_SEQ
-from repro.serving.backends.base import (BackendCapabilities, ExecutionBackend,
-                                         State, StepOutput, register_backend)
+from repro.serving.backends.base import (BackendCapabilities, BatchState,
+                                         ExecutionBackend, State, StepOutput,
+                                         register_backend)
 
 
 def _auto_stages(num_layers: int, n_devices: int) -> int:
@@ -90,14 +101,20 @@ class DistBackend(ExecutionBackend):
 
         self._jit_prefill = jax.jit(self._sharded_prefill)
         self._jit_decode = jax.jit(self._sharded_decode)
-        # decode_batch=False: the pipeline schedule is compiled around a
-        # SINGLE shared scalar position (every stage's dynamic_update_slice
-        # indexes the same tick), so per-slot positions cannot batch here —
-        # the scheduler's per-slot-loop fallback runs instead (one pipeline
-        # pass per active slot per cycle), advertised via capabilities.
+        self._jit_decode_paged = jax.jit(self._sharded_decode_paged,
+                                         donate_argnums=(1, 2))
+        self._jit_extend_paged = jax.jit(self._sharded_extend_paged,
+                                         donate_argnums=(1, 2))
+        # decode_batch=False: the DENSE pipeline schedule is compiled
+        # around a SINGLE shared scalar position (every stage's
+        # dynamic_update_slice indexes the same tick), so per-slot
+        # positions cannot batch there — the per-slot-loop fallback runs.
+        # paged_kv=True: the paged cache write is a per-row block scatter,
+        # which batches fine, so kv_layout="paged" IS the batched
+        # multi-device serving path.
         self.capabilities = BackendCapabilities(
             name=mode, dispatches_per_token=1, device_argmax=True,
-            decode_batch=False)
+            decode_batch=False, paged_kv=True)
 
     # ------------------------------------------------------------------
     def pipeline_stats(self) -> PipelineStats:
@@ -208,6 +225,175 @@ class DistBackend(ExecutionBackend):
         logits = transformer.unembed(params, cfg, x)
         cache = {"k": kcache, "v": vcache, "pos": pos + 1}
         return cache, logits, jnp.argmax(logits, -1).astype(jnp.int32)
+
+    # -- paged KV: per-stage layer-slice arenas under shard_map ----------
+    @staticmethod
+    def _gather_local(arena_local, table):
+        """(N, Lc, Bs, KV, hd) stage-local arena + (S, W) block table →
+        (Lc, S, W·Bs, KV, hd) dense per-layer view of this stage's slice,
+        position-identical to the dense cache layout."""
+        g = arena_local[table]                  # (S, W, Lc, Bs, KV, hd)
+        s, w, lc, bs = g.shape[:4]
+        g = jnp.moveaxis(g, 2, 0)               # (Lc, S, W, Bs, KV, hd)
+        return g.reshape(lc, s, w * bs, *g.shape[4:])
+
+    def _sharded_decode_paged(self, params, ak, av, table, pos, tokens):
+        """One paged decode cycle for EVERY active slot, pipelined.
+
+        Each stage gathers its layer-slice of the arena through the
+        (replicated) block table, runs its layer chunk at per-row
+        positions, and the new K/V rows are scattered back into the
+        stage-sharded arena — the per-row scatter is what lets per-slot
+        positions batch where the dense pipeline could not.
+        """
+        cfg = self.cfg
+        x = params["embed"][tokens]             # (S_slots, 1, d)
+        nslots = tokens.shape[0]
+        lc = cfg.num_layers // self.stages
+        hd = cfg.resolved_head_dim
+
+        def inner(blocks_local, xx, ak_l, av_l, tbl, ps):
+            kd = self._gather_local(ak_l, tbl)
+            vd = self._gather_local(av_l, tbl)
+
+            def block_step(bl, xc, carry):
+                def one(c, scan_in):
+                    p, kc, vc = scan_in
+                    return transformer.decode_core_rows(
+                        p, cfg, c, kc, vc, ps, emit_cache=False)
+                return lax.scan(one, xc, (bl, kd, vd))
+
+            body = self._pipeline_blocks(block_step)
+            init = (jnp.zeros((lc, nslots, cfg.num_kv_heads, hd), xx.dtype),
+                    jnp.zeros((lc, nslots, cfg.num_kv_heads, hd), xx.dtype))
+            return body(blocks_local, xx, init)
+
+        def run(blocks, x, ak, av, table, pos):
+            from repro.dist import shard_map
+            fn = shard_map(inner, mesh=self.mesh,
+                           in_specs=(jax.tree.map(lambda _: P("stage"),
+                                                  blocks), P(),
+                                     P(None, "stage"), P(None, "stage"),
+                                     P(), P()),
+                           out_specs=(P(), (P("stage"), P("stage"))),
+                           check_rep=False)
+            return fn(blocks, x, ak, av, table, pos)
+
+        x, (knew, vnew) = run(params["blocks"], x, ak, av, table, pos)
+        logits = transformer.unembed(params, cfg, x)
+        bs = ak.shape[2]
+        rows = jnp.arange(nslots)
+        bids = table[rows, pos // bs]
+        offs = pos % bs
+        # knew (L, S_slots, KV, hd) → (S_slots, L, KV, hd); the write lands
+        # in each slot's current block (host made it exclusively ours), and
+        # the layer axis stays stage-local under the arena's sharding
+        ak = ak.at[bids, :, offs].set(jnp.moveaxis(knew, 0, 1)
+                                      .astype(ak.dtype))
+        av = av.at[bids, :, offs].set(jnp.moveaxis(vnew, 0, 1)
+                                      .astype(av.dtype))
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return ak, av, logits, nxt
+
+    def _sharded_extend_paged(self, params, ak, av, table_row, pos0, valid,
+                              tokens):
+        """One chunked-prefill step for one slot through the pipeline."""
+        cfg = self.cfg
+        x = params["embed"][tokens]             # (1, C, d)
+        c = tokens.shape[1]
+        lc = cfg.num_layers // self.stages
+        hd = cfg.resolved_head_dim
+
+        def inner(blocks_local, xx, ak_l, av_l, tbl, p0):
+            kd = self._gather_local(ak_l, tbl)
+            vd = self._gather_local(av_l, tbl)
+            positions = p0 + jnp.arange(c)
+
+            def block_step(bl, xc, carry):
+                def one(cr, scan_in):
+                    p, kc, vc = scan_in
+                    return transformer.extend_block(p, cfg, cr, kc, vc, p0,
+                                                    positions)
+                return lax.scan(one, xc, (bl, kd, vd))
+
+            body = self._pipeline_blocks(block_step)
+            init = (jnp.zeros((lc, 1, c, cfg.num_kv_heads, hd), xx.dtype),
+                    jnp.zeros((lc, 1, c, cfg.num_kv_heads, hd), xx.dtype))
+            return body(blocks_local, xx, init)
+
+        def run(blocks, x, ak, av, table_row, pos0):
+            from repro.dist import shard_map
+            fn = shard_map(inner, mesh=self.mesh,
+                           in_specs=(jax.tree.map(lambda _: P("stage"),
+                                                  blocks), P(),
+                                     P(None, "stage"), P(None, "stage"),
+                                     P(), P()),
+                           out_specs=(P(), (P("stage"), P("stage"))),
+                           check_rep=False)
+            return fn(blocks, x, ak, av, table_row, pos0)
+
+        x, (kch, vch) = run(params["blocks"], x, ak, av, table_row, pos0)
+        x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+        logits = transformer.unembed(params, cfg, x_last)
+        bs = ak.shape[2]
+        idx = pos0 + jnp.arange(c)
+        bids = table_row[0, idx // bs]
+        offs = idx % bs
+        # kch (L, 1, C, KV, hd) → (C, L, KV, hd); padded positions land in
+        # writable blocks and are overwritten before anything attends them
+        ak = ak.at[bids, :, offs].set(jnp.moveaxis(kch[:, 0], 0, 1)
+                                      .astype(ak.dtype))
+        av = av.at[bids, :, offs].set(jnp.moveaxis(vch[:, 0], 0, 1)
+                                      .astype(av.dtype))
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return ak, av, logits, nxt
+
+    def alloc_slots_paged(self, num_slots: int, *, block_size: int = 16,
+                          prefill_chunk: Optional[int] = None,
+                          num_blocks: Optional[int] = None,
+                          prefix_cache: bool = True) -> BatchState:
+        bstate = self._make_paged_state(num_slots, block_size=block_size,
+                                        prefill_chunk=prefill_chunk,
+                                        num_blocks=num_blocks,
+                                        prefix_cache=prefix_cache)
+        # every stage owns its layer-slice of EVERY block: shard the layer
+        # axis over the mesh; block ids / refcounts / the radix tree stay
+        # host-side and global, so admission and eviction are driven from
+        # the scheduler exactly as on one device
+        pool = bstate["paged"].pool
+        stage_sh = NamedSharding(self.mesh, P(None, "stage"))
+        pool.set_arena(jax.device_put(pool.arena_k, stage_sh),
+                       jax.device_put(pool.arena_v, stage_sh))
+        return bstate
+
+    def prefill_paged_chunk(self, bstate: BatchState, slot: int
+                            ) -> Optional[StepOutput]:
+        return self._prefill_chunk_with(
+            bstate, slot, self._extend_with_jit(self._jit_extend_paged))
+
+    def decode_batch(self, bstate: BatchState, tokens, slots: Sequence[int]
+                     ) -> Tuple[BatchState, StepOutput]:
+        """Paged: ONE pipelined dispatch advances every slot (replacing the
+        dense per-slot-loop fallback, which the base class still provides
+        for ``kv_layout='dense'``)."""
+        if "paged" not in bstate:
+            return super().decode_batch(bstate, tokens, slots)
+        pg = bstate["paged"]
+        copies = 0
+        for s in slots:
+            copies += pg.ensure_writable(s, int(pg.pos[s]),
+                                         int(pg.pos[s]) + 1)
+        t0 = time.perf_counter()
+        ak, av, logits, nxt = self._jit_decode_paged(
+            self.params, pg.pool.arena_k, pg.pool.arena_v,
+            jnp.asarray(pg.table), jnp.asarray(pg.pos),
+            jnp.asarray(tokens, jnp.int32))
+        enq = time.perf_counter() - t0
+        self._record(RunStats(wall_s=enq, dispatches=1 + copies, shape_ops=0,
+                              sync_mode="none", enqueue_s=enq))
+        pg.pool.set_arena(ak, av)
+        pg.advance(slots)
+        return bstate, StepOutput(logits, nxt)
 
     # ------------------------------------------------------------------
     def _run(self, fn, *args) -> Tuple[object, StepOutput]:

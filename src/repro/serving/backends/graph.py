@@ -13,15 +13,26 @@ graph (per-row positions, per-row cache scatter) over a slot-major
 single-request graph, so one cycle's dispatch stream amortizes over every
 active slot — the structural escape from the paper's ~95 µs/op batch-1
 overhead wall.
+
+Paged KV: ``alloc_slots_paged`` swaps the dense pool for a graph-layout
+``BlockPool`` arena (one ``k_arena_i``/``v_arena_i`` input per layer —
+exactly the paged OpGraph's named inputs, so no per-cycle re-layout) and
+decodes through ``build_decode_graph(paged=True)``, whose dispatch count
+is IDENTICAL to the ``slot_pos`` graph — this is the dispatch-measured
+path, so paging must stay free in the per-operation accounting the CI
+bench job gates.  Chunked prefill runs ``build_extend_graph`` — the same
+per-op stream as prefill, through block tables — so radix prefix hits
+skip REAL dispatches on the measured regime.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.engine import DispatchEngine, FullGraphEngine
-from repro.core.graphs import LEVELS, build_decode_graph, build_prefill_graph
+from repro.core.engine import DispatchEngine, FullGraphEngine, RunStats
+from repro.core.graphs import (LEVELS, build_decode_graph, build_extend_graph,
+                               build_prefill_graph)
 from repro.serving import kvcache as kv
 from repro.serving.kvcache import SlotKVCache
 from repro.serving.backends.base import (BackendCapabilities, BatchState,
@@ -53,12 +64,18 @@ class GraphBackend(ExecutionBackend):
                                else DispatchEngine(graph))
         self._prefill_engines: Dict[int, Any] = {}
         self._batched_engines: Dict[int, Any] = {}   # num_slots → engine
+        # paged engines are pool-stateless (arenas/tables are run inputs),
+        # so they are shared across schedulers with the same pool geometry
+        self._paged_engines: Dict[Any, Any] = {}     # decode, keyed on
+        self._paged_extend_engines: Dict[Any, Any] = {}   # pool geometry
+        batchable = self.cfg.family in ("dense", "moe")
         self.capabilities = BackendCapabilities(
             name=mode,
             dispatches_per_token=1 if self._full else graph.num_dispatches(),
             device_argmax=True,
             phase_timeline=True,
-            decode_batch=self.cfg.family in ("dense", "moe"),
+            decode_batch=batchable,
+            paged_kv=batchable,
         )
 
     # ------------------------------------------------------------------
@@ -130,7 +147,10 @@ class GraphBackend(ExecutionBackend):
         kvp.write(slot, state["cache"], int(state["pos"]))
         return bstate
 
-    def release_slot(self, bstate: BatchState, slot: int) -> BatchState:
+    def release_slot(self, bstate: BatchState, slot: int,
+                     tokens=None) -> BatchState:
+        if "paged" in bstate:
+            return super().release_slot(bstate, slot, tokens)
         if "kv" not in bstate:
             return super().release_slot(bstate, slot)
         bstate["kv"].free(slot)
@@ -140,6 +160,8 @@ class GraphBackend(ExecutionBackend):
                      slots: Sequence[int]) -> Tuple[BatchState, StepOutput]:
         """One dispatch STREAM (F-levels) or ONE dispatch (FULL) per cycle,
         shared by every active slot via per-row graph positions."""
+        if "paged" in bstate:
+            return self._decode_batch_paged(bstate, tokens, slots)
         if "kv" not in bstate:
             return super().decode_batch(bstate, tokens, slots)
         kvp: SlotKVCache = bstate["kv"]
@@ -152,4 +174,103 @@ class GraphBackend(ExecutionBackend):
         kvp.tree = {f"{c}_cache_{l}": out[f"{c}_cache_{l}"]
                     for l in range(self.cfg.num_layers) for c in ("k", "v")}
         kvp.advance(slots)
+        return bstate, StepOutput(out["logits"], out["next_token"])
+
+    # -- paged KV: block-pool arena + radix cache through the OpGraphs ----
+    def alloc_slots_paged(self, num_slots: int, *, block_size: int = 16,
+                          prefill_chunk: Optional[int] = None,
+                          num_blocks: Optional[int] = None,
+                          prefix_cache: bool = True) -> BatchState:
+        if not self.capabilities.paged_kv:
+            raise NotImplementedError(
+                f"{self.capabilities.name!r} has no paged-KV support")
+        bstate = self._make_paged_state(num_slots, block_size=block_size,
+                                        prefill_chunk=prefill_chunk,
+                                        num_blocks=num_blocks,
+                                        prefix_cache=prefix_cache,
+                                        layout="graph")
+        pg = bstate["paged"]
+        key = (num_slots, block_size, pg.pool.num_blocks, pg.width)
+        eng = self._paged_engines.get(key)
+        if eng is None:
+            # the paged cycle graph: dispatch count IDENTICAL to the
+            # slot_pos graph (asserted in tests and gated in CI) — paging
+            # is free in the per-operation accounting this backend measures
+            graph = build_decode_graph(self.params, self.cfg,
+                                       batch=num_slots,
+                                       max_len=self.max_len,
+                                       fusion=self._fusion, paged=True,
+                                       block_size=block_size,
+                                       num_blocks=pg.pool.num_blocks,
+                                       table_width=pg.width)
+            eng = (FullGraphEngine(graph) if self._full
+                   else DispatchEngine(graph))
+            self._paged_engines[key] = eng
+        bstate["decode_eng"] = eng
+        return bstate
+
+    def _extend_engine(self, bstate: BatchState, chunk: int):
+        """One compiled extend stream per (chunk width, pool geometry) —
+        shared across schedulers like the per-length prefill engines."""
+        pg = bstate["paged"]
+        key = (chunk, pg.block_size, pg.pool.num_blocks, pg.width)
+        eng = self._paged_extend_engines.get(key)
+        if eng is None:
+            graph = build_extend_graph(self.params, self.cfg, chunk=chunk,
+                                       max_len=self.max_len,
+                                       fusion=self._fusion,
+                                       block_size=pg.block_size,
+                                       num_blocks=pg.pool.num_blocks,
+                                       table_width=pg.width)
+            eng = (FullGraphEngine(graph) if self._full
+                   else DispatchEngine(graph))
+            self._paged_extend_engines[key] = eng
+        return eng
+
+    def _extend_with_engine(self, bstate, slot, buf, cur, valid, copies):
+        """Engine-driven executor for the shared ``_prefill_chunk_with``
+        driver: one per-op dispatch stream (or one captured dispatch for
+        FULL) per chunk, honestly accounted."""
+        pg = bstate["paged"]
+        if copies:
+            self._record(RunStats(wall_s=0.0, dispatches=copies, shape_ops=0,
+                                  sync_mode="none"))
+        eng = self._extend_engine(bstate, buf.shape[1])
+        inputs = dict(pg.pool.tree)
+        inputs["tokens"] = jnp.asarray(buf)
+        inputs["pos0"] = jnp.int32(cur)
+        inputs["valid"] = jnp.int32(valid)
+        inputs["block_table"] = jnp.asarray(pg.table[slot:slot + 1])
+        out, rs = eng.run(inputs, record_timeline=True)
+        self._record(rs)
+        pg.pool.set_tree(out)
+        return out["logits"], out["next_token"]
+
+    def prefill_paged_chunk(self, bstate: BatchState, slot: int
+                            ) -> Optional[StepOutput]:
+        return self._prefill_chunk_with(bstate, slot,
+                                        self._extend_with_engine)
+
+    def _decode_batch_paged(self, bstate: BatchState, tokens,
+                            slots: Sequence[int]
+                            ) -> Tuple[BatchState, StepOutput]:
+        """The paged cycle: same dispatch stream as the dense slot_pos
+        cycle, read/written through per-slot block tables."""
+        pg = bstate["paged"]
+        copies = 0
+        for s in slots:
+            copies += pg.ensure_writable(s, int(pg.pos[s]),
+                                         int(pg.pos[s]) + 1)
+        if copies:
+            self._record(RunStats(wall_s=0.0, dispatches=copies, shape_ops=0,
+                                  sync_mode="none"))
+        eng = bstate["decode_eng"]
+        inputs = dict(pg.pool.tree)
+        inputs["tokens"] = jnp.asarray(tokens, jnp.int32)
+        inputs["pos"] = jnp.asarray(pg.pos)
+        inputs["block_table"] = jnp.asarray(pg.table)
+        out, rs = eng.run(inputs, record_timeline=True)
+        self._record(rs)
+        pg.pool.set_tree(out)
+        pg.advance(slots)
         return bstate, StepOutput(out["logits"], out["next_token"])

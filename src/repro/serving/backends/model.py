@@ -18,14 +18,13 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.engine import RunStats
 from repro.models import transformer
 from repro.serving.kvcache import SlotKVCache
 from repro.serving.backends.base import (BackendCapabilities, BatchState,
-                                         ExecutionBackend, PagedAdmit, State,
-                                         StepOutput, register_backend)
+                                         ExecutionBackend, State, StepOutput,
+                                         register_backend)
 
 
 @register_backend("model")
@@ -112,11 +111,10 @@ class ModelBackend(ExecutionBackend):
                  int(cache["pos"]))
         return bstate
 
-    def release_slot(self, bstate: BatchState, slot: int) -> BatchState:
+    def release_slot(self, bstate: BatchState, slot: int,
+                     tokens=None) -> BatchState:
         if "paged" in bstate:
-            bstate["paged"].free(slot)
-            bstate["meta"].pop(slot, None)
-            return bstate
+            return super().release_slot(bstate, slot, tokens)
         if "kv" not in bstate:
             return super().release_slot(bstate, slot)
         bstate["kv"].free(slot)
@@ -149,68 +147,15 @@ class ModelBackend(ExecutionBackend):
         if not self.capabilities.paged_kv:
             raise NotImplementedError(
                 f"{self.capabilities.name!r} has no paged-KV support")
-        from repro.serving.paging import PagedKVCache, RadixPrefixCache
-        # padded final chunks write up to chunk-1 tokens past the prompt
-        slack = max(0, (prefill_chunk or 1) - 1)
-        pg = PagedKVCache(self.cfg, num_slots, self.max_len,
-                          block_size=block_size, num_blocks=num_blocks,
-                          table_slack=slack)
-        radix = RadixPrefixCache(pg.pool, block_size) if prefix_cache \
-            else None
-        pg.radix = radix
-        return {"num_slots": num_slots, "paged": pg, "radix": radix,
-                "chunk": prefill_chunk, "meta": {}}
-
-    def admit_paged(self, bstate: BatchState, slot: int, prompt
-                    ) -> PagedAdmit:
-        """Radix match + shared-block adoption; no prefill compute."""
-        pg = bstate["paged"]
-        radix = bstate["radix"]
-        toks = np.asarray(prompt, np.int32).reshape(-1)
-        pg.allocate(slot)
-        # cap the match at plen-1: the last prompt token always runs
-        # through the extend path so first-token logits exist
-        matched, blocks = (radix.match(toks[:-1]) if radix is not None
-                           else (0, []))
-        copies = pg.adopt_prefix(slot, matched, blocks)
-        if copies:
-            self._record(RunStats(wall_s=0.0, dispatches=copies, shape_ops=0,
-                                  sync_mode="none"))
-        bstate["meta"][slot] = {"prompt": toks, "cursor": matched}
-        return PagedAdmit(cached=matched, total=len(toks))
+        return self._make_paged_state(num_slots, block_size=block_size,
+                                      prefill_chunk=prefill_chunk,
+                                      num_blocks=num_blocks,
+                                      prefix_cache=prefix_cache)
 
     def prefill_paged_chunk(self, bstate: BatchState, slot: int
                             ) -> Optional[StepOutput]:
-        pg = bstate["paged"]
-        meta = bstate["meta"][slot]
-        toks, cur = meta["prompt"], meta["cursor"]
-        plen = len(toks)
-        c = bstate["chunk"] or (plen - cur)
-        valid = min(c, plen - cur)
-        buf = np.zeros((1, c), np.int32)
-        buf[0, :valid] = toks[cur:cur + valid]
-        copies = pg.ensure_writable(slot, cur, cur + c)
-        t0 = time.perf_counter()
-        ak, av, logits, nxt = self._jit_extend_paged(
-            self.params, pg.pool.arena_k, pg.pool.arena_v,
-            jnp.asarray(pg.table[slot:slot + 1]), jnp.int32(cur),
-            jnp.int32(valid), jnp.asarray(buf))
-        enq = time.perf_counter() - t0
-        self._record(RunStats(wall_s=enq, dispatches=1 + copies, shape_ops=0,
-                              sync_mode="none", enqueue_s=enq))
-        pg.pool.set_arena(ak, av)
-        meta["cursor"] = cur + valid
-        pg.pos[slot] = cur + valid
-        if meta["cursor"] < plen:
-            return None
-        radix = bstate["radix"]
-        if radix is not None:
-            # cache the prompt's FULL blocks; the partial tail block stays
-            # private — decode keeps appending into it
-            nfull = plen // pg.block_size
-            radix.insert(toks[:nfull * pg.block_size],
-                         pg.chain(slot, nfull * pg.block_size))
-        return StepOutput(logits, nxt)
+        return self._prefill_chunk_with(
+            bstate, slot, self._extend_with_jit(self._jit_extend_paged))
 
     def _decode_batch_paged(self, bstate: BatchState, tokens,
                             slots: Sequence[int]

@@ -47,6 +47,16 @@ def _copy_block(ak, av, src, dst):
     return cp(ak), cp(av)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_block_tree(tree, src, dst):
+    """Graph-layout COW fork: one executable copying block ``src`` → ``dst``
+    across every per-layer arena leaf."""
+    def cp(a):
+        row = jax.lax.dynamic_index_in_dim(a, src, 0, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(a, row, dst, 0)
+    return jax.tree.map(cp, tree)
+
+
 class BlockPool:
     """Fixed-size KV block arena + free list + refcounts + COW.
 
@@ -56,17 +66,40 @@ class BlockPool:
     requests each hold their own reference); a block returns to the free
     list exactly when its refcount hits zero.  ``cow`` forks a shared block
     before a write diverges it.
+
+    Two device layouts carry the same host bookkeeping (block ids, the free
+    list and refcounts are layout-blind):
+
+    * ``stacked`` — ``arena_k``/``arena_v`` with the layer axis inside,
+      ``(num_blocks, L, block_size, KV, hd)``; what the jitted model-path
+      attention (``decode_step_paged``/``extend_step_paged``) consumes.
+    * ``graph``   — ``tree`` of one ``k_arena_i``/``v_arena_i`` leaf per
+      layer, ``(num_blocks, block_size, KV, hd)`` each, exactly the named
+      inputs the paged decode/extend OpGraphs declare — handed to the
+      dispatch engines with no per-cycle re-layout.
     """
 
-    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int
-                 ) -> None:
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int,
+                 *, layout: str = "stacked") -> None:
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (one is the trash block)")
+        if layout not in ("stacked", "graph"):
+            raise ValueError(f"unknown arena layout {layout!r}")
         hd = cfg.resolved_head_dim
         dt = jnp.dtype(cfg.dtype)
-        shape = (num_blocks, cfg.num_layers, block_size, cfg.num_kv_heads, hd)
-        self.arena_k = jnp.zeros(shape, dt)
-        self.arena_v = jnp.zeros(shape, dt)
+        self.layout = layout
+        self.num_layers = cfg.num_layers
+        if layout == "graph":
+            shape = (num_blocks, block_size, cfg.num_kv_heads, hd)
+            self.tree = {}
+            for i in range(cfg.num_layers):
+                self.tree[f"k_arena_{i}"] = jnp.zeros(shape, dt)
+                self.tree[f"v_arena_{i}"] = jnp.zeros(shape, dt)
+        else:
+            shape = (num_blocks, cfg.num_layers, block_size,
+                     cfg.num_kv_heads, hd)
+            self.arena_k = jnp.zeros(shape, dt)
+            self.arena_v = jnp.zeros(shape, dt)
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.refcount = np.zeros((num_blocks,), np.int32)
@@ -111,6 +144,10 @@ class BlockPool:
     # -- device data ----------------------------------------------------
     def copy_block(self, src: int, dst: int) -> None:
         """One device dispatch: fork ``src``'s KV into ``dst``."""
+        if self.layout == "graph":
+            self.tree = _copy_block_tree(self.tree, jnp.int32(src),
+                                         jnp.int32(dst))
+            return
         self.arena_k, self.arena_v = _copy_block(
             self.arena_k, self.arena_v, jnp.int32(src), jnp.int32(dst))
 
@@ -130,13 +167,24 @@ class BlockPool:
         """Adopt updated arenas returned by a jitted decode/extend step."""
         self.arena_k, self.arena_v = ak, av
 
+    def set_tree(self, outputs: Dict[str, jax.Array]) -> None:
+        """Adopt updated per-layer arenas from a dispatch-engine run (graph
+        layout): every ``*_arena_*`` leaf present in ``outputs`` replaces
+        the pool's copy."""
+        self.tree = {name: outputs[name] for name in self.tree}
+
     # -- memory accounting (dense-vs-paged utilization table) -----------
     @property
     def block_bytes(self) -> int:
-        per = 1
-        for d in self.arena_k.shape[1:]:
-            per *= d
-        return 2 * per * jnp.dtype(self.arena_k.dtype).itemsize
+        leaves = (list(self.tree.values()) if self.layout == "graph"
+                  else [self.arena_k, self.arena_v])
+        total = 0
+        for a in leaves:
+            per = 1
+            for d in a.shape[1:]:
+                per *= d
+            total += per * jnp.dtype(a.dtype).itemsize
+        return total
 
     @property
     def bytes_allocated(self) -> int:
@@ -162,7 +210,7 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int, *,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 table_slack: int = 0) -> None:
+                 table_slack: int = 0, layout: str = "stacked") -> None:
         self.block_size = block_size
         self.num_slots = num_slots
         self.max_len = max_len
@@ -172,7 +220,7 @@ class PagedKVCache:
         if num_blocks is None:
             # every slot full + two spare chains for the prefix cache
             num_blocks = (num_slots + 2) * self.width
-        self.pool = BlockPool(cfg, num_blocks + 1, block_size)
+        self.pool = BlockPool(cfg, num_blocks + 1, block_size, layout=layout)
         self.trash = self.pool.alloc()          # block 0: don't-care writes
         assert self.trash == 0
         self.table = np.zeros((num_slots, self.width), np.int32)
@@ -306,10 +354,19 @@ class PagedKVCache:
     def gather(self, slot: int, length: Optional[int] = None) -> Dict[str, np.ndarray]:
         """Host copy of one slot's logical KV (layers, length, KV, hd)."""
         n = int(self.pos[slot]) if length is None else length
-        ak = np.asarray(self.pool.arena_k)
-        av = np.asarray(self.pool.arena_v)
         bs = self.block_size
         ids = self.table[slot, :_ceildiv(n, bs)]
+        if self.pool.layout == "graph":
+            def layer(c, i):
+                arena = np.asarray(self.pool.tree[f"{c}_arena_{i}"])
+                return np.concatenate([arena[b] for b in ids], axis=0)[:n]
+            k = np.stack([layer("k", i)
+                          for i in range(self.pool.num_layers)])
+            v = np.stack([layer("v", i)
+                          for i in range(self.pool.num_layers)])
+            return {"k": k, "v": v}
+        ak = np.asarray(self.pool.arena_k)
+        av = np.asarray(self.pool.arena_v)
         k = np.concatenate([ak[b] for b in ids], axis=1)[:, :n]
         v = np.concatenate([av[b] for b in ids], axis=1)[:, :n]
         return {"k": k, "v": v}

@@ -492,6 +492,16 @@ class Scheduler:
             tokens[s, 0] = a.last_tok[0, 0]
         return tokens
 
+    @staticmethod
+    def _realized(a: _Active) -> np.ndarray:
+        """The request's realized token sequence (prompt + emitted), handed
+        to ``release_slot`` so paged backends can radix-cache the
+        prompt+completion chain for multi-turn reuse."""
+        prompt = np.atleast_2d(np.asarray(a.req.prompt, np.int32))[0]
+        gen = (np.concatenate(a.tokens, axis=1)[0] if a.tokens
+               else np.zeros((0,), np.int32))
+        return np.concatenate([prompt, gen])
+
     def _retire_cycle(self, out: StepOutput, slots, active, results, bstate,
                       st: SchedulerStats, *, overlapped: bool):
         """Read a cycle's tokens back and feed each slot its row."""
@@ -513,7 +523,8 @@ class Scheduler:
             st.tokens += 1
             if self.session.step_row(a, row):
                 results[a.req.request_id] = self.session.finish(a)
-                bstate = backend.release_slot(bstate, s)
+                bstate = backend.release_slot(bstate, s,
+                                              tokens=self._realized(a))
                 del active[s]
         return bstate
 
@@ -631,7 +642,8 @@ class Scheduler:
                 st.tokens += 1
                 if a.done:
                     results[a.req.request_id] = self.session.finish(a)
-                    bstate = backend.release_slot(bstate, slot)
+                    bstate = backend.release_slot(bstate, slot,
+                                                  tokens=self._realized(a))
                 else:
                     active[slot] = a
             self._track_kv(bstate, st)

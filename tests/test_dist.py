@@ -206,3 +206,51 @@ def test_dist_backend_multi_device_parity():
         np.testing.assert_array_equal(streams["model"], streams["dist"])
         print("OK dist backend parity on", len(jax.devices()), "devices")
     """)
+
+
+@pytest.mark.slow
+def test_dist_backend_paged_decode_multi_stage_parity():
+    """Paged serving on a REAL multi-stage mesh: per-stage layer-slice
+    arenas under shard_map, one pipelined decode cycle for every active
+    slot, chunked prefill through block tables, radix warm hits — greedy
+    streams byte-identical to independent dense runs."""
+    _run("""
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+        from repro.serving import (InferenceSession, Scheduler, ServeRequest,
+                                   create_backend)
+
+        cfg = get_smoke_config("qwen2-1.5b", layers=2, d_model=64, heads=4,
+                               d_ff=128, vocab=256)
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        backend = create_backend("dist", model, params, batch=1, max_len=32,
+                                 stages=2)
+        assert backend.stages == 2 and backend.capabilities.paged_kv
+        session = InferenceSession(backend)
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(0, cfg.vocab_size, size=(1, n))
+                   .astype(np.int32) for n in (9, 4, 13)]
+        refs = [session.run(ServeRequest(prompt=p, max_new_tokens=5)).tokens
+                for p in prompts]
+        sched = Scheduler(session, num_slots=2, kv_layout="paged",
+                          prefill_chunk=4, block_size=4)
+        ids = [sched.submit(ServeRequest(prompt=p, max_new_tokens=5,
+                                         request_id=f"d{i}"))
+               for i, p in enumerate(prompts)]
+        results = sched.run()
+        for i, rid in enumerate(ids):
+            np.testing.assert_array_equal(results[rid].tokens, refs[i])
+        st = sched.last_stats
+        assert st.mean_occupancy > 1.0      # slots genuinely overlapped
+        # ONE pipelined dispatch per cycle (vs one per slot in the dense
+        # per-slot-loop fallback) — the arena's layer axis is stage-sharded
+        assert st.dispatches_per_token < 2.0
+        # warm hit on a repeated prompt reuses the cached chain
+        rid = sched.submit(ServeRequest(prompt=prompts[0], max_new_tokens=5,
+                                        request_id="warm"))
+        np.testing.assert_array_equal(sched.run()[rid].tokens, refs[0])
+        assert sched.last_stats.prefix_hit_tokens > 0
+        print("OK dist paged parity,", backend.stages, "stages,",
+              "disp/tok", st.dispatches_per_token)
+    """, devices=2)
