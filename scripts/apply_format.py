@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Tokenize-based formatting normalizer (the `ruff format` stand-in).
+
+The CI lint job runs ``ruff format --check`` with the ``[format]``
+config in ``ruff.toml`` (double quotes, space indents).  The pinned
+development container has no network and no ruff wheel, so this script
+applies the mechanical, verifiable subset of that style locally:
+
+* string quote style → double quotes (prefix-aware: r/b/f strings
+  included; strings containing a double quote or escapes are left
+  alone, matching ruff's "keep when conversion needs escaping" rule),
+* trailing whitespace stripped, exactly one newline at EOF.
+
+Every rewrite is verified by comparing ``ast.dump`` of the file before
+and after — a change that alters program semantics aborts the run.
+Run ``python scripts/apply_format.py [--check]`` from the repo root;
+``--check`` exits 1 if any file would change (the local pre-push gate).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import io
+import os
+import re
+import sys
+import tokenize
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TREES = ("src", "tests", "benchmarks", "scripts", "examples")
+
+_STR = re.compile(r"^([rbfRBF]{0,2})('''|')")
+
+
+def _requote(tok: str) -> str:
+    """'…' → "…" when the body needs no new escaping; else unchanged."""
+    m = _STR.match(tok)
+    if not m:
+        return tok                         # already double-quoted
+    prefix, delim = m.group(1), m.group(2)
+    body = tok[len(prefix):]
+    if not body.endswith(delim) or len(body) < 2 * len(delim):
+        return tok
+    inner = body[len(delim):-len(delim)]
+    # leave strings alone when flipping the delimiter would need escaping
+    # (embedded double quote) or un-escaping (any backslash sequence)
+    if '"' in inner or "\\" in inner:
+        return tok
+    return prefix + '"' * len(delim) + inner + '"' * len(delim)
+
+
+def format_source(src: str) -> str:
+    """Requote via exact same-length span edits (token positions), so
+    every byte outside the converted string literals is untouched —
+    ``tokenize.untokenize`` is avoided because it re-derives inter-token
+    spacing (e.g. before line-continuation backslashes)."""
+    starts, off = [], 0
+    for ln in src.split("\n"):
+        starts.append(off)
+        off += len(ln) + 1
+    edits = []
+    protected = set()      # 1-based lines inside multi-line string literals
+    for t in tokenize.generate_tokens(io.StringIO(src).readline):
+        if t.type != tokenize.STRING:
+            continue
+        if t.end[0] > t.start[0]:
+            # rstrip must not reach inside a triple-quoted literal's value
+            protected.update(range(t.start[0], t.end[0] + 1))
+        new = _requote(t.string)
+        if new != t.string:
+            a = starts[t.start[0] - 1] + t.start[1]
+            edits.append((a, a + len(t.string), new))
+    out = src
+    for a, b, new in reversed(edits):
+        out = out[:a] + new + out[b:]
+    lines = [ln if i + 1 in protected else ln.rstrip()
+             for i, ln in enumerate(out.split("\n"))]
+    while lines and lines[-1] == "":
+        lines.pop()
+    return "\n".join(lines) + "\n"
+
+
+def process(path: str, check: bool) -> bool:
+    """Returns True when the file is (or was made) clean."""
+    with open(path) as f:
+        src = f.read()
+    try:
+        new = format_source(src)
+    except tokenize.TokenError:
+        print(f"tokenize failed: {path}", file=sys.stderr)
+        return False
+    if new == src:
+        return True
+    if ast.dump(ast.parse(src)) != ast.dump(ast.parse(new)):
+        print(f"REFUSING {path}: normalization changed semantics",
+              file=sys.stderr)
+        return False
+    if check:
+        print(f"would reformat {path}")
+        return False
+    with open(path, "w") as f:
+        f.write(new)
+    print(f"reformatted {path}")
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any file would change")
+    args = ap.parse_args()
+    ok = True
+    for tree in TREES:
+        root = os.path.join(REPO, tree)
+        for dirpath, _, names in os.walk(root):
+            for name in sorted(names):
+                if name.endswith(".py"):
+                    ok &= process(os.path.join(dirpath, name), args.check)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
