@@ -2,8 +2,8 @@
 """Benchmark-trajectory regression gate.
 
 The repo commits its benchmark payloads (``BENCH_serving.json``,
-``BENCH_paging.json``, ``BENCH_paging_graph.json``) as the performance
-trajectory.  CI regenerates them fresh every run; this script diffs the
+``BENCH_paging.json``, ``BENCH_paging_graph.json``, ``BENCH_spec.json``)
+as the performance trajectory.  CI regenerates them fresh every run; this script diffs the
 fresh copies against the committed baselines (``git show <ref>:<file>``)
 and FAILS on a >15% regression in the throughput trajectory.
 
@@ -68,10 +68,26 @@ def _paging_metrics(data: Dict) -> Dict[str, Metric]:
     return out
 
 
+def _spec_metrics(data: Dict) -> Dict[str, Metric]:
+    out: Dict[str, Metric] = {
+        # deterministic: pure counter arithmetic over the gated (n-gram)
+        # row's dispatch stream — acceptance and dispatches/accepted
+        # token are exact given the fixed workload and greedy parity
+        "disp_per_accepted_tok": (
+            data["dispatches_per_accepted_token"], "lower", HARD),
+        "acceptance_rate": (data["acceptance_rate"], "higher", HARD),
+        # wall-clock: warn-only, same noise rationale as serving tok/s
+        "tok_s_spec": (data["tok_s_spec"], "higher", SOFT),
+        "speedup_vs_autoregressive": (data["speedup"], "higher", SOFT),
+    }
+    return out
+
+
 EXTRACTORS = {
     "serving": _serving_metrics,
     "paging": _paging_metrics,
     "paging_graph": _paging_metrics,
+    "spec": _spec_metrics,
 }
 
 
@@ -141,7 +157,7 @@ def check_one(name: str, ref: str, threshold: float) -> Tuple[int, int]:
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("benchmarks", nargs="*",
-                    default=["serving", "paging", "paging_graph"],
+                    default=["serving", "paging", "paging_graph", "spec"],
                     help="benchmark names (BENCH_<name>.json)")
     ap.add_argument("--baseline-ref", default="HEAD",
                     help="git ref holding the committed baselines")

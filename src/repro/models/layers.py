@@ -106,6 +106,9 @@ def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     traffic and keeps GSPMD shardings propagating cleanly).
 
     ``q_offset``: absolute position of q[0] relative to k[0] (decode = Sk-1).
+    Scalar, or (B,) when every batch row sits at its own offset — the
+    speculative-verify regime where each scheduler slot scores its drafted
+    span against its own cache length in one dispatch.
     ``window``: optional sliding-window width (local attention).
     """
     b, sq, h, d = q.shape
@@ -115,12 +118,18 @@ def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     scale = 1.0 / np.sqrt(d)
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
                         preferred_element_type=jnp.float32) * scale
-    qpos = jnp.arange(sq) + q_offset
+    per_row = jnp.ndim(q_offset) == 1
+    off = q_offset[:, None] if per_row else q_offset
+    qpos = jnp.arange(sq) + off                  # (Sq,) or (B, Sq)
     kpos = jnp.arange(k.shape[1])
-    mask = kpos[None, :] <= qpos[:, None]
+    mask = kpos[None, :] <= qpos[..., :, None]   # (Sq, Sk) or (B, Sq, Sk)
     if window is not None:
-        mask = mask & (kpos[None, :] > qpos[:, None] - window)
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+        mask = mask & (kpos[None, :] > qpos[..., :, None] - window)
+    if per_row:
+        mask = mask[:, None, None]               # (B, 1, 1, Sq, Sk)
+    else:
+        mask = mask[None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)

@@ -386,6 +386,38 @@ def extend_block(p: Params, cfg: ModelConfig, x: jax.Array, kc: jax.Array,
     return x + f, (k, v)
 
 
+def verify_block(p: Params, cfg: ModelConfig, x: jax.Array, kc: jax.Array,
+                 vc: jax.Array, pos: jax.Array, positions: jax.Array
+                 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One layer of the PER-ROW multi-token verify path (speculative decode).
+
+    The hybrid of :func:`decode_core_rows` (every row at its own cache
+    position ``pos (B,)``) and :func:`extend_block` (C tokens scored
+    causally in one pass).  ``x`` (B, C, d) holds each slot's candidate
+    span — its pending last token followed by drafted continuations —
+    written at per-row absolute positions ``positions (B, C)`` =
+    ``pos[:, None] + arange(C)``.  The per-row ``q_offset`` mask means row
+    ``b``'s query ``j`` sees exactly cache[:pos[b]+j+1]: identical math to
+    running C sequential decode steps, so greedy verify output matches the
+    autoregressive path bit-for-bit.  Returns (x', (k_chunk, v_chunk));
+    the caller scatters the chunk K/V into its block arena — rejected
+    positions land past the committed ``pos`` and are simply overwritten.
+    """
+    b, c, _ = x.shape
+    xn = L.rmsnorm(x, p["attn_norm"], cfg.rms_eps)
+    q, k, v = _project_qkv(p["attn"], cfg, xn)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    rows = jnp.arange(b)
+    kc = kc.at[rows[:, None], positions].set(k.astype(kc.dtype))
+    vc = vc.at[rows[:, None], positions].set(v.astype(vc.dtype))
+    o = L.causal_attention(q, kc, vc, q_offset=pos,
+                           window=cfg.sliding_window)
+    x = x + L.linear(o.reshape(b, c, -1), p["attn"]["wo"])
+    f, _ = ffn_block(p["ffn"], cfg, L.rmsnorm(x, p["ffn_norm"], cfg.rms_eps))
+    return x + f, (k, v)
+
+
 def decode_step_rows(params: Params, cfg: ModelConfig, cache: Params,
                      tokens: jax.Array) -> Tuple[Params, jax.Array]:
     """One batched decode step with per-row positions (continuous batching).

@@ -11,6 +11,8 @@ from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.session import (BenchmarkReport, InferenceSession,
                                    Scheduler, SchedulerStats, ServeRequest,
                                    ServeResult)
+from repro.serving.spec import (Drafter, ModelDrafter, NgramDrafter,
+                                SpeculativeConfig)
 
 __all__ = [
     "BackendCapabilities", "DispatchStats", "ExecutionBackend", "StepOutput",
@@ -19,4 +21,5 @@ __all__ = [
     "BenchmarkReport", "InferenceSession", "Scheduler", "SchedulerStats",
     "ServeRequest", "ServeResult", "SlotKVCache",
     "BlockPool", "PagedKVCache", "RadixPrefixCache",
+    "Drafter", "ModelDrafter", "NgramDrafter", "SpeculativeConfig",
 ]

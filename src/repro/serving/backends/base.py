@@ -71,6 +71,9 @@ class BackendCapabilities:
     paged_kv: bool = False          # paged block-pool KV + chunked prefill +
                                     # radix prefix cache (alloc_slots_paged /
                                     # admit_paged / prefill_paged_chunk)
+    speculative: bool = False       # verify_paged(): score a drafted span
+                                    # per slot in ONE batched dispatch over
+                                    # the paged KV (requires paged_kv)
 
 
 @dataclasses.dataclass
@@ -233,7 +236,8 @@ class ExecutionBackend(abc.ABC):
     def alloc_slots_paged(self, num_slots: int, *, block_size: int = 16,
                           prefill_chunk: Optional[int] = None,
                           num_blocks: Optional[int] = None,
-                          prefix_cache: bool = True) -> BatchState:
+                          prefix_cache: bool = True,
+                          spec_slack: int = 0) -> BatchState:
         """A paged batch state: block pool + per-slot tables (+ radix)."""
         raise NotImplementedError(
             f"{self.capabilities.name!r} has no paged-KV support")
@@ -241,15 +245,18 @@ class ExecutionBackend(abc.ABC):
     def _make_paged_state(self, num_slots: int, *, block_size: int,
                           prefill_chunk: Optional[int],
                           num_blocks: Optional[int], prefix_cache: bool,
-                          layout: str = "stacked") -> BatchState:
+                          layout: str = "stacked",
+                          spec_slack: int = 0) -> BatchState:
         """Construct the uniform paged bstate — pool + radix + chunk/meta
         bookkeeping.  The chunk-slack rule lives here ONCE: padded final
         chunks write up to chunk-1 tokens past the prompt, so tables get
-        that much extra width.  Backends layer their device specifics on
-        top (graph: engines over a ``layout="graph"`` arena; dist:
-        stage-resharding the arena)."""
+        that much extra width (``spec_slack`` extends it again for
+        speculative verify, whose span may overhang ``max_len`` by the
+        draft width before rejection rewinds it).  Backends layer their
+        device specifics on top (graph: engines over a ``layout="graph"``
+        arena; dist: stage-resharding the arena)."""
         from repro.serving.paging import PagedKVCache, RadixPrefixCache
-        slack = max(0, (prefill_chunk or 1) - 1)
+        slack = max(0, (prefill_chunk or 1) - 1) + max(0, spec_slack)
         pg = PagedKVCache(self.cfg, num_slots, self.max_len,
                           block_size=block_size, num_blocks=num_blocks,
                           table_slack=slack, layout=layout)
@@ -340,6 +347,24 @@ class ExecutionBackend(abc.ABC):
             return logits, nxt
         return run
 
+    def verify_paged(self, bstate: BatchState, tokens, slots: Sequence[int],
+                     spans) -> Tuple[BatchState, StepOutput]:
+        """One speculative-verify cycle: score every slot's candidate span
+        in ONE batched target dispatch.
+
+        ``tokens`` is (num_slots, C) int32 — column 0 holds slot s's
+        pending last token (an ordinary decode step), columns 1.. its
+        drafted continuation, zero-padded.  ``spans[s]`` is how many
+        columns slot s actually uses (1 for non-speculating slots).
+        Returns a slot-indexed ``StepOutput`` with (S, C, V) logits and
+        (S, C) next tokens: ``next_token[s, j]`` is the target's greedy
+        pick after consuming ``tokens[s, :j+1]``.  The backend scatters
+        K/V for ALL C positions but does NOT advance ``pos`` — the caller
+        commits or rolls back through the slot-fork API.
+        """
+        raise NotImplementedError(
+            f"{self.capabilities.name!r} has no speculative verify")
+
     def _finish_paged_prefill(self, bstate: BatchState, slot: int) -> None:
         """Shared end-of-prompt bookkeeping: cache the prompt's FULL blocks
         in the radix tree (the partial tail block stays private — decode
@@ -369,8 +394,13 @@ class ExecutionBackend(abc.ABC):
         pg = bstate["paged"]
         radix = bstate["radix"]
         if radix is not None and tokens is not None:
-            covered = int(pg.pos[slot])
-            seq = np.asarray(tokens, np.int32).reshape(-1)[:covered]
+            seq = np.asarray(tokens, np.int32).reshape(-1)
+            # cap at the REALIZED length as well as pos: a speculative
+            # fork can leave pos past the accepted stream (rejected draft
+            # KV parked beyond it), and those draft tokens must never
+            # become radix-cache keys
+            covered = min(int(pg.pos[slot]), len(seq))
+            seq = seq[:covered]
             nfull = len(seq) // pg.block_size
             if nfull:
                 radix.insert(seq[:nfull * pg.block_size],

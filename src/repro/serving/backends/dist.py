@@ -351,11 +351,13 @@ class DistBackend(ExecutionBackend):
     def alloc_slots_paged(self, num_slots: int, *, block_size: int = 16,
                           prefill_chunk: Optional[int] = None,
                           num_blocks: Optional[int] = None,
-                          prefix_cache: bool = True) -> BatchState:
+                          prefix_cache: bool = True,
+                          spec_slack: int = 0) -> BatchState:
         bstate = self._make_paged_state(num_slots, block_size=block_size,
                                         prefill_chunk=prefill_chunk,
                                         num_blocks=num_blocks,
-                                        prefix_cache=prefix_cache)
+                                        prefix_cache=prefix_cache,
+                                        spec_slack=spec_slack)
         # every stage owns its layer-slice of EVERY block: shard the layer
         # axis over the mesh; block ids / refcounts / the radix tree stay
         # host-side and global, so admission and eviction are driven from

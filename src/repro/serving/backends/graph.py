@@ -180,7 +180,8 @@ class GraphBackend(ExecutionBackend):
     def alloc_slots_paged(self, num_slots: int, *, block_size: int = 16,
                           prefill_chunk: Optional[int] = None,
                           num_blocks: Optional[int] = None,
-                          prefix_cache: bool = True) -> BatchState:
+                          prefix_cache: bool = True,
+                          spec_slack: int = 0) -> BatchState:
         if not self.capabilities.paged_kv:
             raise NotImplementedError(
                 f"{self.capabilities.name!r} has no paged-KV support")
@@ -188,7 +189,8 @@ class GraphBackend(ExecutionBackend):
                                         prefill_chunk=prefill_chunk,
                                         num_blocks=num_blocks,
                                         prefix_cache=prefix_cache,
-                                        layout="graph")
+                                        layout="graph",
+                                        spec_slack=spec_slack)
         pg = bstate["paged"]
         key = (num_slots, block_size, pg.pool.num_blocks, pg.width)
         eng = self._paged_engines.get(key)

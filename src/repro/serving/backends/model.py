@@ -63,15 +63,21 @@ class ModelBackend(ExecutionBackend):
             return extend_step_paged(p, self.cfg, ak, av, table_row, pos0,
                                      valid, t)
 
+        def _verify_paged(p, ak, av, table, pos, t):
+            from repro.serving.paging import verify_step_paged
+            return verify_step_paged(p, self.cfg, ak, av, table, pos, t)
+
         self._jit_prefill = jax.jit(_prefill)
         self._jit_decode = jax.jit(_decode)
         self._jit_decode_rows = jax.jit(_decode_rows, donate_argnums=(1, 2))
         self._jit_decode_paged = jax.jit(_decode_paged, donate_argnums=(1, 2))
         self._jit_extend_paged = jax.jit(_extend_paged, donate_argnums=(1, 2))
+        self._jit_verify_paged = jax.jit(_verify_paged, donate_argnums=(1, 2))
         batchable = self.cfg.family in ("dense", "moe")
         self.capabilities = BackendCapabilities(
             name=mode, dispatches_per_token=1, device_argmax=True,
-            decode_batch=batchable, paged_kv=batchable)
+            decode_batch=batchable, paged_kv=batchable,
+            speculative=batchable)
 
     # ------------------------------------------------------------------
     def _run(self, fn, *args) -> Tuple[object, StepOutput]:
@@ -143,14 +149,16 @@ class ModelBackend(ExecutionBackend):
     def alloc_slots_paged(self, num_slots: int, *, block_size: int = 16,
                           prefill_chunk: Optional[int] = None,
                           num_blocks: Optional[int] = None,
-                          prefix_cache: bool = True) -> BatchState:
+                          prefix_cache: bool = True,
+                          spec_slack: int = 0) -> BatchState:
         if not self.capabilities.paged_kv:
             raise NotImplementedError(
                 f"{self.capabilities.name!r} has no paged-KV support")
         return self._make_paged_state(num_slots, block_size=block_size,
                                       prefill_chunk=prefill_chunk,
                                       num_blocks=num_blocks,
-                                      prefix_cache=prefix_cache)
+                                      prefix_cache=prefix_cache,
+                                      spec_slack=spec_slack)
 
     def prefill_paged_chunk(self, bstate: BatchState, slot: int
                             ) -> Optional[StepOutput]:
@@ -174,4 +182,30 @@ class ModelBackend(ExecutionBackend):
                               sync_mode="none", enqueue_s=enq))
         pg.pool.set_arena(ak, av)
         pg.advance(slots)
+        return bstate, StepOutput(logits, nxt)
+
+    def verify_paged(self, bstate: BatchState, tokens,
+                     slots: Sequence[int], spans
+                     ) -> Tuple[BatchState, StepOutput]:
+        """ONE dispatch scores every slot's candidate span (speculative
+        verify).  Writes K/V for the full span but does NOT advance
+        ``pos`` — the scheduler commits the accepted prefix through the
+        slot-fork API (rollback = pos rewind, zero KV copies)."""
+        if not self.capabilities.speculative:
+            raise NotImplementedError(
+                f"{self.capabilities.name!r} has no speculative verify")
+        pg = bstate["paged"]
+        copies = 0
+        for s, span in zip(slots, spans):
+            copies += pg.ensure_writable(s, int(pg.pos[s]),
+                                         int(pg.pos[s]) + max(int(span), 1))
+        t0 = time.perf_counter()
+        ak, av, logits, nxt = self._jit_verify_paged(
+            self.params, pg.pool.arena_k, pg.pool.arena_v,
+            jnp.asarray(pg.table), jnp.asarray(pg.pos),
+            jnp.asarray(tokens, jnp.int32))
+        enq = time.perf_counter() - t0
+        self._record(RunStats(wall_s=enq, dispatches=1 + copies, shape_ops=0,
+                              sync_mode="none", enqueue_s=enq))
+        pg.pool.set_arena(ak, av)
         return bstate, StepOutput(logits, nxt)

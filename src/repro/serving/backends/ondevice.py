@@ -52,6 +52,7 @@ class OnDeviceBackend(ModelBackend):
             on_device_loop=True,
             decode_batch=self.capabilities.decode_batch,  # inherited rows path
             paged_kv=self.capabilities.paged_kv,          # inherited paged path
+            speculative=self.capabilities.speculative,    # inherited verify
         )
 
     def generate_ondevice(self, state: State, first_tok, n_new: int,

@@ -23,6 +23,7 @@ host-side masking.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import heapq
 from typing import Dict, List, Optional, Sequence, Set, Tuple
@@ -195,6 +196,26 @@ class BlockPool:
         return self.num_live * self.block_bytes
 
 
+@dataclasses.dataclass(frozen=True)
+class SlotFork:
+    """Checkpoint of one slot's table state before a speculative write.
+
+    Rollback needs only two integers: the committed valid length and how
+    many blocks the slot owned.  Speculative writes past ``pos0`` either
+    land in blocks allocated AFTER the checkpoint (tracked by position in
+    the slot's ``_owned`` list — drop = decref, zero copies) or in blocks
+    the slot already owned exclusively, where positions ≥ the committed
+    ``pos`` are dead by construction (the causal mask never reads them and
+    the next write overwrites them).  COW forks triggered while the fork
+    is open replace entries in-place below ``n_owned0`` and are KEPT on
+    rollback — a COW copy is content-identical, so the rewound slot is
+    unchanged semantically.
+    """
+    slot: int
+    pos0: int
+    n_owned0: int
+
+
 class PagedKVCache:
     """Slot bookkeeping over a ``BlockPool``: the paged ``SlotKVCache``.
 
@@ -344,6 +365,55 @@ class PagedKVCache:
                 own[own.index(bid)] = nb
                 self.table[slot, i] = nb
         return copies
+
+    # -- speculative forks (COW-backed draft/verify/rollback) -----------
+    def fork_slot(self, slot: int) -> SlotFork:
+        """Checkpoint ``slot`` before speculative writes land past its
+        committed position.  O(1): records the valid length and the owned-
+        block count — no table copy, no KV copy."""
+        if slot not in self._live:
+            raise RuntimeError(f"fork of unallocated slot {slot}")
+        return SlotFork(slot=slot, pos0=int(self.pos[slot]),
+                        n_owned0=len(self._owned[slot]))
+
+    def commit_fork(self, slot: int, fork: SlotFork, new_pos: int) -> None:
+        """Adopt the accepted span: valid length becomes ``new_pos`` and
+        blocks allocated for the fork that now lie entirely past it are
+        returned.  Zero KV copies — accepted tokens were written in place
+        by the verify dispatch."""
+        if fork.slot != slot:
+            raise RuntimeError(
+                f"fork belongs to slot {fork.slot}, not {slot}")
+        if not fork.pos0 <= new_pos:
+            raise RuntimeError(
+                f"commit_fork rewinds past checkpoint ({new_pos} < "
+                f"{fork.pos0})")
+        self.pos[slot] = new_pos
+        self._trim_fork_blocks(slot, fork, new_pos)
+
+    def drop_fork(self, slot: int, fork: SlotFork) -> None:
+        """Reject the whole speculative span: rewind to the checkpoint and
+        release every block the fork allocated.  Zero KV copies — the
+        rejected writes sit past ``pos0`` where nothing can read them."""
+        self.commit_fork(slot, fork, fork.pos0)
+
+    def _trim_fork_blocks(self, slot: int, fork: SlotFork,
+                          keep_upto: int) -> None:
+        """Release fork-allocated blocks past logical position
+        ``keep_upto``.  Only blocks appended since the checkpoint are
+        candidates; COW replacements below ``n_owned0`` stay (they carry
+        the committed prefix)."""
+        keep_blocks = _ceildiv(keep_upto, self.block_size)
+        own = self._owned[slot]
+        kept = own[:fork.n_owned0]
+        for bid in own[fork.n_owned0:]:
+            idxs = np.flatnonzero(self.table[slot] == bid)
+            if idxs.size and int(idxs[0]) >= keep_blocks:
+                self.pool.decref(bid)
+                self.table[slot, idxs] = self.trash
+            else:
+                kept.append(bid)
+        self._owned[slot] = kept
 
     def chain(self, slot: int, tokens: int) -> List[int]:
         """Block ids covering the first ``tokens`` positions of ``slot``."""

@@ -10,6 +10,10 @@ contiguous ``max_len`` rows:
   token at its own position in the same dispatch, gathering its cache
   through ``block_table`` and scattering the new token's K/V back into its
   current (always privately-owned) block.
+* ``verify_step_paged`` — one speculative-verify cycle: every slot scores
+  its pending token plus K drafted continuations at per-row positions in
+  the same dispatch, the per-row causal offset keeping each candidate's
+  view identical to sequential decode (exact greedy parity).
 * ``extend_step_paged`` — one chunked-prefill step: run ``chunk`` prompt
   tokens of one slot against everything already cached for it (shared
   prefix blocks included), append the chunk's K/V into its blocks, and
@@ -75,6 +79,53 @@ def decode_step_paged(params, cfg: ModelConfig, arena_k: jax.Array,
         jnp.moveaxis(knew, 0, 1).astype(arena_k.dtype))
     arena_v = arena_v.at[bids, :, offs].set(
         jnp.moveaxis(vnew, 0, 1).astype(arena_v.dtype))
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    return arena_k, arena_v, logits, nxt
+
+
+def verify_step_paged(params, cfg: ModelConfig, arena_k: jax.Array,
+                      arena_v: jax.Array, table: jax.Array, pos: jax.Array,
+                      tokens: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One speculative-verify cycle: score C candidate tokens per slot in
+    ONE dispatch through the block tables.
+
+    ``tokens`` (S, C) int32 — column 0 is each slot's pending last token
+    (so position 0 IS an ordinary decode step), columns 1.. are drafted
+    continuations (zero-padded for non-speculating slots).  Returns
+    (arena_k', arena_v', logits (S, C, V), next_token (S, C)) where
+    ``next_token[s, j]`` is the target model's greedy choice after
+    consuming ``tokens[s, :j+1]`` — the reference stream the drafts are
+    accepted against.  K/V for all C positions is scattered at
+    [pos, pos+C); positions past the accepted span stay beyond the
+    committed ``pos`` and are overwritten by the next cycle, with the
+    causal mask keeping them unreadable meanwhile (same argument as chunk
+    padding in ``extend_step_paged``).
+    """
+    x = params["embed"][tokens]
+    kd = gather_blocks(arena_k, table)
+    vd = gather_blocks(arena_v, table)
+    c = tokens.shape[1]
+    positions = pos[:, None] + jnp.arange(c)       # (S, C)
+
+    def body(carry, xs):
+        p, kc, vc = xs
+        return transformer.verify_block(p, cfg, carry, kc, vc, pos,
+                                        positions)
+
+    x, (kch, vch) = jax.lax.scan(body, x, (params["blocks"], kd, vd))
+    logits = transformer.unembed(params, cfg, x)
+    bs = arena_k.shape[2]
+    rows = jnp.arange(tokens.shape[0])
+    bids = table[rows[:, None], positions // bs]   # (S, C)
+    offs = positions % bs
+    # kch (L, S, C, KV, hd) → (S, C, L, KV, hd): advanced indices (bids,
+    # offs) are separated by the layer slice, so they move to the front —
+    # the same trick decode_step_paged uses, batched over the span axis
+    arena_k = arena_k.at[bids, :, offs].set(
+        jnp.moveaxis(kch, 0, 2).astype(arena_k.dtype))
+    arena_v = arena_v.at[bids, :, offs].set(
+        jnp.moveaxis(vch, 0, 2).astype(arena_v.dtype))
     nxt = jnp.argmax(logits, -1).astype(jnp.int32)
     return arena_k, arena_v, logits, nxt
 

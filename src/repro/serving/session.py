@@ -32,6 +32,8 @@ import numpy as np
 from repro.core.stats import Summary, summarize
 from repro.serving.backends.base import ExecutionBackend, StepOutput
 from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.spec import (Drafter, NgramDrafter, SpeculativeConfig,
+                                greedy_accept)
 
 _req_counter = itertools.count()
 
@@ -298,6 +300,15 @@ class SchedulerStats:
     # KV memory utilization (satellite: dense vs paged in one table)
     kv_bytes_allocated: int = 0
     kv_bytes_live_peak: int = 0
+    # speculative decoding (Scheduler(speculative=...))
+    speculative: str = ""            # drafter name; "" ⇒ speculation off
+    spec_cycles: int = 0             # verify cycles issued
+    verify_dispatches: int = 0       # ONE batched target dispatch per cycle
+    draft_dispatches: int = 0        # drafter-side dispatches (0 for n-gram)
+    draft_tokens_proposed: int = 0
+    draft_tokens_accepted: int = 0   # drafts the target's argmax agreed with
+    bonus_tokens: int = 0            # free token after each accepted span
+    spec_tokens: int = 0             # tokens emitted by verify cycles
 
     @property
     def mean_occupancy(self) -> float:
@@ -318,6 +329,44 @@ class SchedulerStats:
     @property
     def kv_utilization(self) -> float:
         return self.kv_bytes_live_peak / max(self.kv_bytes_allocated, 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the target's argmax agreed with."""
+        return self.draft_tokens_accepted / max(self.draft_tokens_proposed, 1)
+
+    @property
+    def dispatches_per_accepted_token(self) -> float:
+        """Target dispatches per token emitted on the speculative path —
+        the paper's amortization lever: one verify dispatch yields
+        ``1 + accepted`` tokens, so this sits at ``1 / (1 + a·k̄)`` and
+        must undercut the autoregressive ``dispatches_per_token`` (≈ 1)
+        for speculation to pay.  Draft dispatches are accounted
+        separately (``draft_dispatches``): the n-gram drafter issues
+        none, and a small-model drafter's are deliberately cheap.  0.0
+        when no speculative token was emitted (the zero-token edge)."""
+        if not self.spec_tokens:
+            return 0.0
+        return self.verify_dispatches / self.spec_tokens
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Every dataclass field plus the derived metrics — the lossless
+        serialization ``from_dict`` round-trips (derived keys are
+        recomputed, not stored)."""
+        d = dataclasses.asdict(self)
+        d["mean_occupancy"] = self.mean_occupancy
+        d["dispatches_per_token"] = self.dispatches_per_token
+        d["aggregate_tok_per_s"] = self.aggregate_tok_per_s
+        d["prefix_hit_rate"] = self.prefix_hit_rate
+        d["kv_utilization"] = self.kv_utilization
+        d["acceptance_rate"] = self.acceptance_rate
+        d["dispatches_per_accepted_token"] = self.dispatches_per_accepted_token
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SchedulerStats":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
 
     def row(self) -> Dict[str, Any]:
         return {
@@ -347,6 +396,14 @@ class SchedulerStats:
             "kv_bytes_allocated": self.kv_bytes_allocated,
             "kv_bytes_live_peak": self.kv_bytes_live_peak,
             "kv_utilization": round(self.kv_utilization, 3),
+            "speculative": self.speculative,
+            "spec_cycles": self.spec_cycles,
+            "verify_dispatches": self.verify_dispatches,
+            "draft_dispatches": self.draft_dispatches,
+            "acceptance_rate": round(self.acceptance_rate, 3),
+            "bonus_tokens": self.bonus_tokens,
+            "dispatches_per_accepted_token": round(
+                self.dispatches_per_accepted_token, 3),
         }
 
 
@@ -379,6 +436,17 @@ class Scheduler:
     The paged batch state (block pool + radix cache) persists across
     ``run`` calls, so prefix hits accumulate over a scheduler's lifetime.
 
+    ``speculative=...`` (paged layout only) turns decode cycles into
+    draft/verify cycles: a :class:`~repro.serving.spec.Drafter` proposes
+    up to K tokens per slot from its realized sequence, the target scores
+    pending-token + drafts in ONE batched ``verify_paged`` dispatch, and
+    the accepted prefix (plus one free bonus token) is committed through
+    a COW block-table fork — rejection is a zero-copy position rewind.
+    Greedy output is bit-identical to the autoregressive path; slots with
+    non-greedy samplers (or logits readback) transparently fall back to
+    plain decode within the same verify dispatch.  Accepts ``"ngram"``, a
+    ``SpeculativeConfig``, or a ``Drafter`` instance.
+
     ``async_readback`` double-buffers the device→host token readback:
     while the run is in a steady state (greedy token-readback requests, no
     stop tokens or stream callbacks, nobody finishing), the NEXT decode
@@ -393,7 +461,8 @@ class Scheduler:
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = True, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 async_readback: bool = True) -> None:
+                 async_readback: bool = True,
+                 speculative=None) -> None:
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if kv_layout not in ("dense", "paged"):
@@ -402,6 +471,19 @@ class Scheduler:
             raise ValueError("paged KV requires the continuous scheduler")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if speculative is not None:
+            if kv_layout != "paged":
+                raise ValueError(
+                    "speculative decoding requires kv_layout='paged' (the "
+                    "COW block-fork rollback lives in the paging arena)")
+            if isinstance(speculative, (str, Drafter)):
+                speculative = SpeculativeConfig(drafter=speculative)
+            elif not isinstance(speculative, SpeculativeConfig):
+                raise ValueError(
+                    "speculative must be a drafter name, a Drafter, or a "
+                    f"SpeculativeConfig; got {type(speculative).__name__}")
+        self._spec: Optional[SpeculativeConfig] = speculative
+        self._drafter: Optional[Drafter] = None
         self.session = session
         self.num_slots = num_slots
         self.continuous = continuous
@@ -443,7 +525,8 @@ class Scheduler:
         and fairness accounting for the run lands in ``self.last_stats``."""
         st = SchedulerStats(num_slots=self.num_slots,
                             continuous=self.continuous,
-                            kv_layout=self.kv_layout)
+                            kv_layout=self.kv_layout,
+                            speculative=self._drafter_name())
         backend = self.session.backend
         d0 = backend.dispatch_stats().dispatches
         t0 = time.perf_counter()
@@ -594,6 +677,118 @@ class Scheduler:
         self._bstate = bstate
         return results
 
+    # -- speculative draft/verify/commit --------------------------------
+    def _drafter_name(self) -> str:
+        if self._spec is None:
+            return ""
+        d = self._spec.drafter
+        return d if isinstance(d, str) else type(d).__name__
+
+    def _ensure_drafter(self) -> Drafter:
+        if self._drafter is None:
+            d = self._spec.drafter
+            self._drafter = (NgramDrafter(self._spec.max_n, self._spec.min_n)
+                             if isinstance(d, str) else d)
+        return self._drafter
+
+    @staticmethod
+    def _spec_eligible(a: _Active) -> bool:
+        """Speculation preserves the exact stream only under greedy
+        device-argmax decoding — other slots ride the same verify dispatch
+        as plain single-token decodes (column 0)."""
+        return (a.req.sampler.kind == "greedy"
+                and a.req.readback == "token")
+
+    def _spec_cycle(self, bstate, active: Dict[int, "_Active"], results,
+                    st: SchedulerStats):
+        """One draft → verify → commit cycle across every active slot.
+
+        Each eligible slot drafts up to K tokens against a COW block-table
+        fork; ONE batched ``verify_paged`` dispatch scores every slot's
+        pending token + drafts at per-row positions; the longest agreeing
+        draft prefix plus the free bonus token is emitted and the fork is
+        committed to exactly the consumed span — a full rejection rewinds
+        by pure bookkeeping (zero KV copies: the drafted K/V sits past the
+        committed position where nothing can read it).
+        """
+        backend = self.session.backend
+        pg = bstate["paged"]
+        drafter = self._ensure_drafter()
+        k = self._spec.k
+        width = k + 1
+        slots = tuple(sorted(active))
+        tokens = np.zeros((self.num_slots, width), np.int32)
+        spans, drafts, forks = [], {}, {}
+        disp0 = drafter.dispatches
+        for s in slots:
+            a = active[s]
+            tokens[s, 0] = a.last_tok[0, 0]
+            d = np.zeros((0,), np.int32)
+            if self._spec_eligible(a):
+                # never draft past the token budget: the final emission
+                # must stay the bonus/decode token so pos bookkeeping
+                # matches the autoregressive invariant exactly
+                cap = min(k, a.req.max_new_tokens - len(a.tokens) - 1)
+                if cap > 0:
+                    d = np.asarray(
+                        drafter.propose(s, self._realized(a), cap),
+                        np.int32).reshape(-1)[:cap]
+            if d.size:
+                forks[s] = pg.fork_slot(s)
+                drafts[s] = d
+                tokens[s, 1:1 + d.size] = d
+            spans.append(1 + d.size)
+        st.draft_dispatches += drafter.dispatches - disp0
+        bstate, out = backend.verify_paged(bstate, tokens, slots, spans)
+        st.cycles += 1
+        st.spec_cycles += 1
+        st.verify_dispatches += 1
+        st.occupancy_sum += len(slots)
+        self._track_kv(bstate, st)
+        t0 = time.perf_counter()
+        nxt = np.asarray(out.next_token, np.int32)       # (S, width)
+        st.sync_readback_s += time.perf_counter() - t0
+        for s in slots:
+            a = active[s]
+            d = drafts.get(s)
+            if d is None:
+                # plain decode riding the verify dispatch: column 0 IS the
+                # ordinary decode step (same K/V write, same logits)
+                st.tokens += 1
+                st.spec_tokens += 1
+                pg.pos[s] += 1
+                done = self.session.step_row(
+                    a, StepOutput(out.logits[s:s + 1, 0:1], nxt[s:s + 1, 0:1]))
+            else:
+                accepted = greedy_accept(d, nxt[s])
+                emitted = 0
+                done = False
+                # emit the agreed prefix + the bonus token, stopping early
+                # on stop-token/budget (later columns are then rejected)
+                for j in range(accepted + 1):
+                    st.tokens += 1
+                    st.spec_tokens += 1
+                    emitted += 1
+                    done = self.session.step_row(
+                        a, StepOutput(out.logits[s:s + 1, j:j + 1],
+                                      nxt[s:s + 1, j:j + 1]))
+                    if done:
+                        break
+                st.draft_tokens_proposed += int(d.size)
+                st.draft_tokens_accepted += min(emitted, accepted)
+                if emitted == accepted + 1:
+                    st.bonus_tokens += 1
+                # commit exactly the consumed inputs; everything past is
+                # dropped by decref/pos-rewind — never a KV copy
+                pg.commit_fork(s, forks[s], forks[s].pos0 + emitted)
+            if done:
+                results[a.req.request_id] = self.session.finish(a)
+                bstate = backend.release_slot(bstate, s,
+                                              tokens=self._realized(a))
+                drafter.release(s)
+                del active[s]
+        return bstate
+
     # -- paged KV + radix prefix cache + chunked prefill -----------------
     def _run_paged(self, st: SchedulerStats) -> Dict[str, ServeResult]:
         backend = self.session.backend
@@ -601,11 +796,16 @@ class Scheduler:
             raise ValueError(
                 f"backend {backend.capabilities.name!r} has no paged-KV "
                 "support; use kv_layout='dense'")
+        if self._spec is not None and not backend.capabilities.speculative:
+            raise ValueError(
+                f"backend {backend.capabilities.name!r} has no speculative "
+                "verify; drop speculative= or use the model backend")
         if self._bstate is None:
             self._bstate = backend.alloc_slots_paged(
                 self.num_slots, block_size=self.block_size,
                 prefill_chunk=self.prefill_chunk,
-                num_blocks=self.num_blocks, prefix_cache=self.prefix_cache)
+                num_blocks=self.num_blocks, prefix_cache=self.prefix_cache,
+                spec_slack=(self._spec.k + 1) if self._spec else 0)
         bstate = self._bstate
         pg = bstate["paged"]
         radix = bstate["radix"]
@@ -648,6 +848,12 @@ class Scheduler:
                     active[slot] = a
             self._track_kv(bstate, st)
             if not active:
+                continue
+            if self._spec is not None:
+                # draft/verify cycles are inherently synchronous: the
+                # accept decision needs the verified tokens on the host
+                # before the next span can be drafted
+                bstate = self._spec_cycle(bstate, active, results, st)
                 continue
             bstate, slots, out = self._issue_cycle(
                 bstate, active, st, self._host_tokens(active))

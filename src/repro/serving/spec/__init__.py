@@ -1,0 +1,36 @@
+"""Speculative decoding over COW block forks.
+
+The paper's central measurement — ~95 µs of per-dispatch overhead
+dominating batch-1 decode regardless of kernel quality — makes "more
+accepted tokens per dispatch" the highest-leverage serving optimization.
+This subsystem implements it over the paged KV arena from PR 4/5:
+
+* **Draft** — a :class:`Drafter` proposes up to K continuation tokens per
+  slot.  :class:`NgramDrafter` is the zero-extra-weights prompt-lookup
+  drafter (zero extra dispatches); :class:`ModelDrafter` runs a small
+  model autoregressively (the paper's qwen2.5-0.5b drafting for
+  qwen2.5-1.5b).
+* **Verify** — the target model scores every slot's pending token plus
+  its drafted span in ONE batched dispatch
+  (``ExecutionBackend.verify_paged`` → ``verify_step_paged``), with
+  per-row causal offsets keeping the math identical to sequential
+  decode.  :func:`greedy_accept` takes the longest draft prefix the
+  target agrees with; the position after it yields a free bonus token.
+* **Rollback** — drafted K/V lands beyond the slot's committed position
+  inside a :class:`~repro.serving.paging.SlotFork` checkpoint; accepting
+  is ``commit_fork`` (pos jumps forward), rejecting is ``drop_fork``
+  (pos rewinds) — both zero-copy, because COW already guarantees the
+  speculated blocks are exclusively owned.
+
+Greedy speculative output is bit-identical to the autoregressive path:
+acceptance tests compare against the target's own argmax stream, so a
+wrong draft can only cost speed, never change a token.
+"""
+from repro.serving.spec.config import SpeculativeConfig
+from repro.serving.spec.drafter import Drafter, ModelDrafter, NgramDrafter
+from repro.serving.spec.verify import greedy_accept
+
+__all__ = [
+    "Drafter", "ModelDrafter", "NgramDrafter", "SpeculativeConfig",
+    "greedy_accept",
+]

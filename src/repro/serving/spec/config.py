@@ -1,0 +1,37 @@
+"""Speculative-decoding configuration (`Scheduler(speculative=...)`)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativeConfig:
+    """How to draft and how far to speculate.
+
+    ``drafter`` — ``"ngram"`` (prompt-lookup, zero extra weights and zero
+    extra dispatches) or a :class:`~repro.serving.spec.Drafter` instance
+    (e.g. a :class:`~repro.serving.spec.ModelDrafter` over a small model).
+    ``k`` — max drafted tokens per verify cycle.  The verify span is
+    ``k + 1`` wide (pending token + K drafts), so one accepted-everything
+    cycle emits ``k + 1`` tokens for one target dispatch; one
+    rejected-everything cycle still emits 1 (the verify column 0 IS a
+    normal decode step), so speculation never loses tokens, only the
+    draft work.  ``max_n``/``min_n`` bound the n-gram match length the
+    prompt-lookup drafter tries (longest first).
+    """
+    drafter: Union[str, object] = "ngram"
+    k: int = 4
+    max_n: int = 4
+    min_n: int = 1
+
+    def __post_init__(self) -> None:
+        if self.k < 1:
+            raise ValueError(f"speculative k must be >= 1, got {self.k}")
+        if not 1 <= self.min_n <= self.max_n:
+            raise ValueError(
+                f"need 1 <= min_n <= max_n, got [{self.min_n}, {self.max_n}]")
+        if isinstance(self.drafter, str) and self.drafter != "ngram":
+            raise ValueError(
+                f"unknown drafter {self.drafter!r}; pass 'ngram' or a "
+                "Drafter instance")

@@ -1,0 +1,149 @@
+"""Draft-token proposers for speculative decoding.
+
+A drafter's contract is deliberately tiny: given a slot's REALIZED
+sequence (prompt + every emitted token), propose up to ``k`` continuation
+tokens.  Wrong proposals cost only the wasted verify columns — the
+verifier's greedy parity guarantee means they can never change the output
+stream — so drafters are free to be heuristic.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Drafter(abc.ABC):
+    """Proposes up to ``k`` continuation tokens for one slot."""
+
+    @abc.abstractmethod
+    def propose(self, slot: int, seq: np.ndarray, k: int) -> np.ndarray:
+        """``seq`` — the slot's realized tokens (prompt + emitted), host
+        int32.  Returns (m,) int32 with ``0 <= m <= k``; empty means "no
+        idea", which downgrades the cycle to a plain decode step."""
+
+    def release(self, slot: int) -> None:
+        """Drop any per-slot state (request finished).  Default: none."""
+
+    @property
+    def dispatches(self) -> int:
+        """Cumulative device dispatches this drafter has issued (0 for
+        host-side drafters) — accounted separately from target dispatches
+        in ``SchedulerStats``."""
+        return 0
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup drafting: zero extra weights, zero extra dispatches.
+
+    Find the longest n-gram (``max_n`` down to ``min_n``) whose final-
+    suffix occurrence repeats earlier in the realized sequence, and
+    propose the ``k`` tokens that followed its most recent earlier
+    occurrence.  LLM output replays its own context constantly (code,
+    quotations, structured formats — and the paper's multi-turn serving
+    traces replay whole conversation prefixes), so this accepts well
+    exactly where speculation pays most, for free.
+    """
+
+    def __init__(self, max_n: int = 4, min_n: int = 1) -> None:
+        if not 1 <= min_n <= max_n:
+            raise ValueError(
+                f"need 1 <= min_n <= max_n, got [{min_n}, {max_n}]")
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, slot: int, seq: np.ndarray, k: int) -> np.ndarray:
+        seq = np.asarray(seq, np.int32).reshape(-1)
+        n_tok = len(seq)
+        for n in range(min(self.max_n, n_tok - 1), self.min_n - 1, -1):
+            pat = seq[n_tok - n:]
+            # windows over seq[:-1] so the suffix's own occurrence is
+            # excluded; most recent earlier match wins (local repetition
+            # beats stale context)
+            wins = np.lib.stride_tricks.sliding_window_view(seq[:-1], n)
+            hits = np.flatnonzero((wins == pat).all(axis=1))
+            if hits.size:
+                start = int(hits[-1])
+                follow = seq[start + n:start + n + k]
+                if follow.size:
+                    return follow.astype(np.int32)
+        return np.zeros((0,), np.int32)
+
+
+class ModelDrafter(Drafter):
+    """Small-model drafting: run a cheap model autoregressively for K
+    tokens, verify on the big one (the paper's qwen2.5-0.5b → 1.5b pair).
+
+    Wraps any ``ExecutionBackend`` over the draft model.  Per-slot draft
+    KV caches persist across cycles: each ``propose`` rewinds the dense
+    draft cache to the longest common prefix of what the draft model has
+    already consumed and the target's realized sequence (rejected drafts
+    simply fall off the end — the dense cache's scalar ``pos`` makes
+    rewind a host-side integer assignment), then catches up on the
+    accepted tokens before drafting ahead.  Draft dispatches are real
+    dispatches and are surfaced via :attr:`dispatches` so
+    ``SchedulerStats`` can report them next to target dispatches.
+    """
+
+    def __init__(self, backend) -> None:
+        if not getattr(backend.capabilities, "device_argmax", False):
+            raise ValueError("ModelDrafter needs a device_argmax backend")
+        self.backend = backend
+        self._slots: Dict[int, Dict[str, object]] = {}
+
+    @property
+    def dispatches(self) -> int:
+        return self.backend.dispatch_stats().dispatches
+
+    def release(self, slot: int) -> None:
+        self._slots.pop(slot, None)
+
+    def _catch_up(self, slot: int, seq: List[int]) -> int:
+        """Bring the slot's draft cache to cover seq[:-1] with seq[-1]
+        pending; returns the draft model's next-token prediction."""
+        ent = self._slots.get(slot)
+        lcp = 0
+        if ent is not None:
+            consumed = ent["consumed"]
+            n = min(len(consumed), len(seq))
+            while lcp < n and consumed[lcp] == seq[lcp]:
+                lcp += 1
+        if ent is None or lcp == 0:
+            state, out = self.backend.prefill(
+                np.asarray([seq], np.int32))
+            self._slots[slot] = {"state": state, "consumed": list(seq)}
+            return int(np.asarray(out.next_token)[0, 0])
+        # dense-cache rewind: positions >= lcp become dead padding the
+        # causal mask already ignores; re-feeding overwrites them
+        state = ent["state"]
+        state["cache"]["pos"] = jnp.int32(lcp)
+        ent["consumed"] = list(seq[:lcp])
+        nxt = None
+        for tok in seq[lcp:]:
+            state, out = self.backend.decode_step(
+                state, np.asarray([[tok]], np.int32))
+            ent["consumed"].append(int(tok))
+            nxt = int(np.asarray(out.next_token)[0, 0])
+        ent["state"] = state
+        if nxt is None:
+            # nothing to catch up (consumed already covers seq): re-score
+            # the last realized token to recover the pending prediction
+            state["cache"]["pos"] = jnp.int32(len(seq) - 1)
+            ent["consumed"] = list(seq[:-1])
+            return self._catch_up(slot, seq)
+        return nxt
+
+    def propose(self, slot: int, seq: np.ndarray, k: int) -> np.ndarray:
+        seq = [int(t) for t in np.asarray(seq, np.int32).reshape(-1)]
+        drafts = [self._catch_up(slot, seq)]
+        ent = self._slots[slot]
+        state = ent["state"]
+        for _ in range(k - 1):
+            state, out = self.backend.decode_step(
+                state, np.asarray([[drafts[-1]]], np.int32))
+            ent["consumed"].append(drafts[-1])
+            drafts.append(int(np.asarray(out.next_token)[0, 0]))
+        ent["state"] = state
+        return np.asarray(drafts[:k], np.int32)

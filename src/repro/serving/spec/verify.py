@@ -1,0 +1,25 @@
+"""Draft acceptance against the target model's verify outputs."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def greedy_accept(drafts: np.ndarray, targets: np.ndarray) -> int:
+    """Longest accepted draft prefix under greedy (argmax) decoding.
+
+    ``targets[j]`` is the target model's greedy pick after consuming the
+    pending token plus ``drafts[:j]``; draft ``drafts[j]`` is accepted iff
+    it equals ``targets[j]`` — i.e. iff it is exactly what autoregressive
+    decode would have produced.  Returns ``a``, the count of accepted
+    drafts; the cycle then emits ``targets[:a]`` (== ``drafts[:a]``) plus
+    the free bonus token ``targets[a]``, so every verify dispatch yields
+    at least one token and the output stream is bit-identical to the
+    autoregressive path by construction.
+    """
+    drafts = np.asarray(drafts).reshape(-1)
+    targets = np.asarray(targets).reshape(-1)
+    a = 0
+    while a < len(drafts) and a < len(targets) \
+            and int(drafts[a]) == int(targets[a]):
+        a += 1
+    return a

@@ -554,3 +554,102 @@ def test_dist_paged_release_and_memory_accounting(setup):
     assert sched.last_stats.kv_bytes_live_peak > 0
     # the released request's chain stays cached for the next warm hit
     assert sched._bstate["radix"].num_nodes > 0
+
+
+# ---------------------------------------------------------------------------
+# fork accounting under churn (speculative rollback-heavy traffic)
+# ---------------------------------------------------------------------------
+
+def _apply_fork_churn(cfg, ops):
+    """Interpret a fuzz op stream against a fresh PagedKVCache and assert
+    the pool invariants after every op: free+live partitions the arena,
+    refcounts and the free list agree, owned blocks are live, and a full
+    teardown leaks nothing.  Opcodes: 0 allocate, 1 write+advance,
+    2 adopt-share into the other slot, 3 open a speculative fork,
+    4 partial commit, 5 drop (rollback), 6 free slot."""
+    from repro.serving.paging.allocator import _ceildiv
+
+    pg = PagedKVCache(cfg, num_slots=2, max_len=24, block_size=4,
+                      num_blocks=14)
+    pool, bs = pg.pool, pg.block_size
+    cap = pg.width * bs
+    forks = {}
+
+    def check():
+        assert pool.num_free + pool.num_live == pool.num_blocks
+        free = set(pool._free)
+        for b in range(pool.num_blocks):
+            assert (pool.refcount[b] == 0) == (b in free)
+            assert pool.refcount[b] >= 0
+        for own in pg._owned.values():
+            for b in own:
+                assert pool.refcount[b] >= 1 and b not in free
+        for s in pg._live:
+            # table entries covering [0, pos) are real owned-or-shared
+            # blocks, never recycled ones
+            for i in range(_ceildiv(int(pg.pos[s]), bs)):
+                assert pool.refcount[int(pg.table[s, i])] >= 1
+
+    for code, arg in ops:
+        s = arg % 2
+        pos = int(pg.pos[s]) if s in pg._live else 0
+        if code == 0 and s not in pg._live:
+            pg.allocate(s)
+        elif code == 1 and s in pg._live and pos < cap:
+            pg.ensure_writable(s, pos, pos + 1)
+            pg.pos[s] = pos + 1
+        elif code == 2 and s in pg._live and (1 - s) not in pg._live \
+                and pos >= 1:
+            take = (arg // 2) % pos + 1
+            pg.allocate(1 - s)
+            pg.adopt_prefix(1 - s, take, pg.chain(s, take))
+        elif code == 3 and s in pg._live and s not in forks:
+            span = (arg // 2) % 5 + 1
+            if pos + span <= cap:
+                forks[s] = (pg.fork_slot(s), span)
+                pg.ensure_writable(s, pos, pos + span)
+        elif code == 4 and s in forks:
+            f, span = forks.pop(s)
+            pg.commit_fork(s, f, f.pos0 + (arg // 2) % (span + 1))
+        elif code == 5 and s in forks:
+            pg.drop_fork(s, forks.pop(s)[0])
+        elif code == 6 and s in pg._live:
+            forks.pop(s, None)
+            pg.free(s)
+        check()
+
+    for s, (f, _) in list(forks.items()):
+        pg.drop_fork(s, f)
+    for s in list(pg._live):
+        pg.free(s)
+    assert pool.num_live == 1            # trash block only: zero leaks
+    assert pool.num_free == pool.num_blocks - 1
+
+
+def test_fork_churn_randomized(setup):
+    """Deterministic 400-op churn over cow/adopt/fork/commit/drop/free —
+    always runs (no hypothesis needed)."""
+    model, _ = setup
+    rng = np.random.default_rng(1234)
+    ops = [(int(rng.integers(0, 7)), int(rng.integers(0, 64)))
+           for _ in range(400)]
+    _apply_fork_churn(model.cfg, ops)
+
+
+def test_fork_churn_property(setup):
+    """Hypothesis-guarded version: shrinks any violating interleaving to
+    a minimal op sequence."""
+    pytest.importorskip("hypothesis", reason="property tests need the "
+                        "hypothesis dev extra")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    model, _ = setup
+
+    @given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 63)),
+                    max_size=60))
+    @settings(max_examples=25, deadline=None)
+    def prop(ops):
+        _apply_fork_churn(model.cfg, ops)
+
+    prop()
