@@ -153,13 +153,18 @@ def run_serving(quick: bool = False, tokens: int = 16,
                 "disp_per_tok_sequential": round(
                     st_q.dispatches_per_token, 2),
                 "mean_occupancy": round(st_c.mean_occupancy, 2),
+                "ttft_p50_ms": round(st_c.ttft_p50_ms, 2),
+                "ttft_p99_ms": round(st_c.ttft_p99_ms, 2),
+                "tpot_p50_ms": round(st_c.tpot_p50_ms, 2),
+                "tpot_p99_ms": round(st_c.tpot_p99_ms, 2),
             })
     print_table("Continuous batching: amortization curve (bench-0.5b, "
                 "greedy parity asserted)",
                 rows, ["mode", "concurrent", "tok_s_continuous",
                        "tok_s_sequential", "speedup",
                        "disp_per_tok_continuous", "disp_per_tok_sequential",
-                       "mean_occupancy"])
+                       "mean_occupancy", "ttft_p50_ms", "ttft_p99_ms",
+                       "tpot_p50_ms"])
     payload = {
         "quick": quick,
         "rows": rows,
@@ -526,6 +531,160 @@ def run_speculative(quick: bool = False, gate: bool = False) -> Dict:
     return payload
 
 
+# ---------------------------------------------------------------------------
+# observability: traced serving run + per-backend overhead attribution
+# (BENCH_obs.json, trace_obs.json + CI self-consistency gate)
+# ---------------------------------------------------------------------------
+
+def run_obs(quick: bool = False, gate: bool = False,
+            profile_dir: str = "") -> Dict:
+    """Traced paged serving run + the paper's §7.2 overhead decomposition.
+
+    Serves a small paged workload with ``repro.obs`` tracing enabled and
+    writes three artifacts: the Perfetto trace-event JSON
+    (``benchmarks/results/trace_obs.json``), the serving metrics registry
+    (``metrics_obs.json``), and ``BENCH_obs.json`` — per-backend
+    ``OverheadReport`` rows splitting per-op cost into {host Python,
+    dispatch submit, device compute} for the model backend (1 fused
+    dispatch/step) vs the F3 dispatch graph (per-op dispatch stream).
+
+    ``gate`` asserts the tracer's self-consistency invariant CI rides on:
+    the trace-derived dispatch total equals the backend's
+    ``dispatch_stats()`` delta EXACTLY (both flow through the one
+    ``_record`` choke point), and the traced decode-cycle span count
+    equals ``SchedulerStats.cycles``.
+
+    ``profile_dir`` additionally wraps the serving run in
+    ``jax.profiler`` so the XLA-level trace lands next to the obs trace
+    (uploaded together as CI artifacts).
+    """
+    import os
+
+    from benchmarks.common import RESULTS_DIR
+    from repro.obs import (MetricsRegistry, Tracer, measure_overhead,
+                           overhead_table, validate_trace, write_metrics,
+                           write_trace)
+
+    tokens = 8 if quick else 16
+    n_req = 4 if quick else 6
+    num_slots = 2
+    plen = 12
+    max_len = plen + tokens + 8
+    model = build_model(BENCH_05B)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, BENCH_05B.vocab_size, size=(1, plen))
+               .astype(np.int32) for _ in range(n_req)]
+
+    backend = create_backend("model", model, params, batch=1,
+                             max_len=max_len)
+    session = InferenceSession(backend)
+    # warmup compiles the extend/decode executables so the traced pass
+    # records steady-state dispatches, not XLA compilation
+    wsched = Scheduler(session, num_slots=num_slots, kv_layout="paged",
+                       prefill_chunk=8, prefix_cache=False)
+    for p in prompts[:num_slots]:
+        wsched.submit(ServeRequest(prompt=p, max_new_tokens=tokens))
+    wsched.run()
+
+    tracer = Tracer()
+    metrics = MetricsRegistry()
+    sched = Scheduler(session, num_slots=num_slots, kv_layout="paged",
+                      prefill_chunk=8, prefix_cache=False,
+                      tracer=tracer, metrics=metrics)
+    for i, p in enumerate(prompts):
+        sched.submit(ServeRequest(prompt=p, max_new_tokens=tokens,
+                                  request_id=f"obs-{i}"))
+    d0 = backend.dispatch_stats().dispatches
+    profiling = False
+    if profile_dir:
+        try:
+            jax.profiler.start_trace(profile_dir)
+            profiling = True
+        except Exception as e:         # profiler plugin absent: obs-only run
+            print(f"  → jax.profiler unavailable ({e}); "
+                  "emitting the obs trace only")
+    try:
+        sched.run()
+    finally:
+        if profiling:
+            jax.profiler.stop_trace()
+    st = sched.last_stats
+    delta = backend.dispatch_stats().dispatches - d0
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    trace_path = write_trace(tracer, os.path.join(RESULTS_DIR,
+                                                  "trace_obs.json"))
+    metrics_path = write_metrics(metrics, os.path.join(RESULTS_DIR,
+                                                       "metrics_obs.json"))
+    import json
+    with open(trace_path) as f:
+        validate_trace(json.load(f))
+
+    trace_total = tracer.dispatch_total()
+    decode_spans = tracer.count("decode_cycle")
+    print(f"\n== Observability: traced paged serving run "
+          f"({n_req} req × {tokens} tok, model backend) ==")
+    print(f"  trace events {len(tracer)} (dropped {tracer.dropped}); "
+          f"dispatch total {trace_total} vs dispatch_stats delta {delta}; "
+          f"decode spans {decode_spans} vs cycles {st.cycles}")
+    print(f"  artifacts: {trace_path}, {metrics_path}"
+          + (f", {profile_dir}/" if profiling else ""))
+
+    # per-backend §7.2 decomposition: 1-dispatch model vs per-op F3 graph
+    rng2 = np.random.default_rng(12)
+    oh_prompt = rng2.integers(0, BENCH_05B.vocab_size, (1, 8))
+    n_steps = 8 if quick else 32
+    reports = []
+    for mode in ("model", "F3"):
+        b = create_backend(mode, model, params, batch=1,
+                           max_len=8 + 2 + 3 * n_steps + 4)
+        reports.append(measure_overhead(b, oh_prompt, n_steps=n_steps))
+    oh_rows = overhead_table(reports)
+    print_table("Overhead attribution: naive vs sequential-dispatch "
+                "timing (µs/op)", oh_rows,
+                ["backend", "dispatches_per_step", "host_python_us",
+                 "submit_us", "device_us", "naive_per_op_us",
+                 "amortized_per_op_us", "amortization_ratio"])
+
+    ok_total = trace_total == delta
+    ok_decode = decode_spans == st.cycles
+    payload = {
+        "quick": quick,
+        "backend": "model",
+        "requests": n_req,
+        "tokens_per_request": tokens,
+        "trace_events": len(tracer),
+        "trace_dropped": tracer.dropped,
+        "trace_dispatch_total": trace_total,
+        "dispatch_stats_delta": delta,
+        "decode_cycle_spans": decode_spans,
+        "scheduler_cycles": st.cycles,
+        "serving": {
+            "dispatches_per_token": round(st.dispatches_per_token, 3),
+            "ttft_p50_ms": round(st.ttft_p50_ms, 2),
+            "ttft_p99_ms": round(st.ttft_p99_ms, 2),
+            "tpot_p50_ms": round(st.tpot_p50_ms, 2),
+            "tpot_p99_ms": round(st.tpot_p99_ms, 2),
+        },
+        "overhead": oh_rows,
+        "gate_trace_matches_stats": ok_total,
+        "gate_decode_spans_match_cycles": ok_decode,
+    }
+    save_results("obs", payload)
+    if gate:
+        print(f"  → obs gate: trace dispatch total "
+              f"{'==' if ok_total else '!='} stats delta; decode spans "
+              f"{'==' if ok_decode else '!='} cycles — "
+              f"{'PASS' if ok_total and ok_decode else 'FAIL'}")
+        if not (ok_total and ok_decode):
+            raise SystemExit(
+                f"obs self-consistency gate failed: trace {trace_total} vs "
+                f"stats {delta}; decode spans {decode_spans} vs cycles "
+                f"{st.cycles}")
+    return payload
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -554,8 +713,21 @@ if __name__ == "__main__":
                     help="fail unless speculative dispatches per accepted "
                          "token < autoregressive dispatches/token and "
                          "speculative tok/s >= autoregressive")
+    ap.add_argument("--obs", action="store_true",
+                    help="run the traced serving + overhead-attribution "
+                         "benchmark (BENCH_obs.json, trace_obs.json)")
+    ap.add_argument("--gate-obs", action="store_true",
+                    help="fail unless the trace-derived dispatch total "
+                         "equals the backend dispatch_stats() delta and "
+                         "decode-cycle spans equal scheduler cycles")
+    ap.add_argument("--profile-dir", default="",
+                    help="also capture a jax.profiler trace of the obs "
+                         "serving run into this directory")
     args = ap.parse_args()
-    if args.speculative or args.gate_spec:
+    if args.obs or args.gate_obs:
+        run_obs(quick=args.quick, gate=args.gate_obs,
+                profile_dir=args.profile_dir)
+    elif args.speculative or args.gate_spec:
         run_speculative(quick=args.quick, gate=args.gate_spec)
     elif args.prefix_reuse or args.gate_paging:
         run_prefix_reuse(quick=args.quick, gate=args.gate_paging,

@@ -2,8 +2,8 @@
 """Benchmark-trajectory regression gate.
 
 The repo commits its benchmark payloads (``BENCH_serving.json``,
-``BENCH_paging.json``, ``BENCH_paging_graph.json``, ``BENCH_spec.json``)
-as the performance trajectory.  CI regenerates them fresh every run; this script diffs the
+``BENCH_paging.json``, ``BENCH_paging_graph.json``, ``BENCH_spec.json``,
+``BENCH_obs.json``) as the performance trajectory.  CI regenerates them fresh every run; this script diffs the
 fresh copies against the committed baselines (``git show <ref>:<file>``)
 and FAILS on a >15% regression in the throughput trajectory.
 
@@ -83,11 +83,35 @@ def _spec_metrics(data: Dict) -> Dict[str, Metric]:
     return out
 
 
+def _obs_metrics(data: Dict) -> Dict[str, Metric]:
+    out: Dict[str, Metric] = {
+        # deterministic: both sides of the self-consistency gate are
+        # exact counter arithmetic through the one _record choke point
+        "trace_matches_stats": (
+            1.0 if data.get("gate_trace_matches_stats") else 0.0,
+            "higher", HARD),
+        "decode_spans_match_cycles": (
+            1.0 if data.get("gate_decode_spans_match_cycles") else 0.0,
+            "higher", HARD),
+    }
+    for row in data.get("overhead", []):
+        key = row["backend"]
+        # deterministic: dispatches/step is structural per backend
+        out[f"disp_per_step[{key}]"] = (
+            row["dispatches_per_step"], "lower", HARD)
+        # wall-clock µs decompositions: warn-only on shared runners
+        out[f"submit_us[{key}]"] = (row["submit_us"], "lower", SOFT)
+        out[f"amortized_per_op_us[{key}]"] = (
+            row["amortized_per_op_us"], "lower", SOFT)
+    return out
+
+
 EXTRACTORS = {
     "serving": _serving_metrics,
     "paging": _paging_metrics,
     "paging_graph": _paging_metrics,
     "spec": _spec_metrics,
+    "obs": _obs_metrics,
 }
 
 
@@ -157,7 +181,8 @@ def check_one(name: str, ref: str, threshold: float) -> Tuple[int, int]:
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("benchmarks", nargs="*",
-                    default=["serving", "paging", "paging_graph", "spec"],
+                    default=["serving", "paging", "paging_graph", "spec",
+                             "obs"],
                     help="benchmark names (BENCH_<name>.json)")
     ap.add_argument("--baseline-ref", default="HEAD",
                     help="git ref holding the committed baselines")

@@ -63,11 +63,19 @@ def main() -> None:
                     help="paged only: block-pool size (default: every slot "
                          "full + two spare prefix chains)")
     ap.add_argument("--out", default=None, help="write JSON rows here")
+    ap.add_argument("--trace-out", default=None,
+                    help="capture a repro.obs dispatch trace of the "
+                         "scheduler runs and write Perfetto trace-event "
+                         "JSON here (open at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the serving metrics registry (p50/p99 "
+                         "TTFT/TPOT/queue-wait, dispatch counters) here")
     args = ap.parse_args()
 
     from repro.configs import REGISTRY, get_smoke_config
     from repro.configs.bench import BENCH_MODELS
     from repro.models import build_model
+    from repro.obs import MetricsRegistry, Tracer, write_metrics, write_trace
     from repro.serving import (InferenceSession, SamplerConfig, Scheduler,
                                ServeRequest, available_backends,
                                create_backend)
@@ -87,6 +95,12 @@ def main() -> None:
     max_len = args.prompt_len + args.tokens + 8
     sampler = SamplerConfig(args.sampler, temperature=args.temperature,
                             top_k=args.top_k)
+    tracing = args.trace_out or args.metrics_out
+    tracer = Tracer() if args.trace_out else None
+    metrics = MetricsRegistry() if args.metrics_out else None
+    if tracing and args.num_slots <= 0:
+        raise SystemExit("--trace-out/--metrics-out record the scheduler "
+                         "path; add --num-slots N")
 
     rows = []
     for mode in args.modes.split(","):
@@ -112,7 +126,8 @@ def main() -> None:
                               prefill_chunk=args.prefill_chunk,
                               prefix_cache=args.prefix_cache,
                               block_size=args.block_size,
-                              num_blocks=args.num_blocks)
+                              num_blocks=args.num_blocks,
+                              tracer=tracer, metrics=metrics)
             for i in range(n_req):
                 p = rng.integers(0, cfg.vocab_size,
                                  size=(1, args.prompt_len)).astype(np.int32)
@@ -127,6 +142,12 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=1)
+    if args.trace_out:
+        print(f"[obs] trace → {write_trace(tracer, args.trace_out)} "
+              f"({len(tracer)} events, {tracer.dropped} dropped; open at "
+              "ui.perfetto.dev)")
+    if args.metrics_out:
+        print(f"[obs] metrics → {write_metrics(metrics, args.metrics_out)}")
 
 
 if __name__ == "__main__":

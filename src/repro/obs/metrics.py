@@ -1,0 +1,160 @@
+"""Serving metrics registry: counters, gauges, quantile histograms.
+
+The serving-side companion to the tracer: where the tracer answers
+"where did THIS cycle's time go", the registry answers "what are the
+p50/p99 TTFT, TPOT and queue-wait over the run" — the SLO numbers the
+ROADMAP's traffic-harness work gates on.  Deliberately tiny and
+dependency-free: histograms keep a bounded reservoir of raw samples and
+compute exact linear-interpolation quantiles over what they kept (the
+same definition as ``numpy.percentile(..., 'linear')``, tested against
+it), which is plenty at serving-bench sample counts.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy's default), 0.0 on empty."""
+    n = len(xs)
+    if n == 0:
+        return 0.0
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q must be in [0, 100], got {q}")
+    s = sorted(xs)
+    pos = (n - 1) * (q / 100.0)
+    lo = int(pos)
+    hi = min(lo + 1, n - 1)
+    frac = pos - lo
+    return s[lo] * (1.0 - frac) + s[hi] * frac
+
+
+class Counter:
+    """Monotonic count (tokens emitted, dispatches issued, ...)."""
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        if v < 0:
+            raise ValueError("counters only go up")
+        self.value += v
+
+
+class Gauge:
+    """Last-set value (occupancy, dispatches/token, ...)."""
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Sample distribution with p50/p99 read-outs.
+
+    Keeps up to ``max_samples`` raw values; past that, reservoir
+    sampling keeps a uniform subset so quantiles stay unbiased while
+    memory stays bounded under production traffic.
+    """
+    __slots__ = ("name", "count", "total", "_samples", "_max", "_seen",
+                 "_rng_state")
+
+    def __init__(self, name: str, max_samples: int = 8192) -> None:
+        self.name = name
+        self.count = 0
+        self.total = 0.0
+        self._samples: List[float] = []
+        self._max = max_samples
+        self._seen = 0
+        self._rng_state = 0x9E3779B9        # deterministic, dependency-free
+
+    def _next_rand(self, n: int) -> int:
+        # xorshift32 — deterministic reservoir choices, no global RNG pull
+        x = self._rng_state
+        x ^= (x << 13) & 0xFFFFFFFF
+        x ^= x >> 17
+        x ^= (x << 5) & 0xFFFFFFFF
+        self._rng_state = x
+        return x % n
+
+    def observe(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        self._seen += 1
+        if len(self._samples) < self._max:
+            self._samples.append(float(v))
+        else:
+            j = self._next_rand(self._seen)
+            if j < self._max:
+                self._samples[j] = float(v)
+
+    @property
+    def mean(self) -> float:
+        return self.total / max(self.count, 1)
+
+    def quantile(self, q: float) -> float:
+        """q in [0, 100] over the retained samples."""
+        return percentile(self._samples, q)
+
+    def to_dict(self) -> Dict[str, float]:
+        return {
+            "count": self.count,
+            "mean": self.mean,
+            "min": min(self._samples, default=0.0),
+            "max": max(self._samples, default=0.0),
+            "p50": self.quantile(50),
+            "p90": self.quantile(90),
+            "p99": self.quantile(99),
+        }
+
+
+class MetricsRegistry:
+    """Named metric store with lazy creation and one-call serialization."""
+
+    def __init__(self) -> None:
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter(name)
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge(name)
+        return g
+
+    def histogram(self, name: str, max_samples: int = 8192) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram(name, max_samples)
+        return h
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "counters": {n: c.value for n, c in sorted(self._counters.items())},
+            "gauges": {n: g.value for n, g in sorted(self._gauges.items())},
+            "histograms": {n: h.to_dict()
+                           for n, h in sorted(self._histograms.items())},
+        }
+
+
+def write_metrics(registry: MetricsRegistry, path: str) -> str:
+    import json
+    with open(path, "w") as f:
+        json.dump(registry.to_dict(), f, indent=1)
+    return path
+
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "percentile",
+           "write_metrics"]

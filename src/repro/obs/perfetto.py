@@ -1,0 +1,121 @@
+"""Trace-event (Perfetto / chrome://tracing) export for ``Tracer`` runs.
+
+Emits the JSON object format — ``{"traceEvents": [...]}`` — that both
+https://ui.perfetto.dev and chrome://tracing open directly.  Mapping:
+
+* every ``Tracer`` track becomes one *thread* (tid) inside a single
+  "repro.serving" process, named via ``"M"`` metadata events and ordered
+  scheduler → per-slot tracks → paging → per-backend dispatch lanes, so
+  the timeline reads top-down the way the serving stack executes;
+* ``"X"`` complete spans carry microsecond ``ts``/``dur`` (normalized so
+  the trace starts at t=0) plus the span args;
+* instants map to ``"i"`` (thread-scoped) and counter samples to ``"C"``
+  — Perfetto renders those as a stepped value track.
+
+``validate_trace`` is the schema check the CI obs gate and the tests
+share: it asserts the structural invariants the viewers rely on rather
+than trusting the exporter by construction.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List
+
+from repro.obs.tracer import Tracer
+
+_PID = 1
+
+#: track-name prefix → sort bucket (lower renders higher in the UI)
+_TRACK_ORDER = ("scheduler", "slot", "paging", "backend:")
+
+
+def _track_sort_key(track: str) -> int:
+    for i, prefix in enumerate(_TRACK_ORDER):
+        if track.startswith(prefix):
+            return i
+    return len(_TRACK_ORDER)
+
+
+def to_trace_events(tracer: Tracer) -> Dict[str, Any]:
+    """Tracer → trace-event JSON document (dict, ready to ``json.dump``)."""
+    events = tracer.events()
+    t0 = min((ev.ts for ev in events), default=0.0)
+    tracks = sorted({ev.track for ev in events},
+                    key=lambda t: (_track_sort_key(t), t))
+    tids = {track: i + 1 for i, track in enumerate(tracks)}
+
+    out: List[Dict[str, Any]] = [{
+        "name": "process_name", "ph": "M", "pid": _PID, "tid": 0,
+        "args": {"name": "repro.serving"},
+    }]
+    for track, tid in tids.items():
+        out.append({"name": "thread_name", "ph": "M", "pid": _PID,
+                    "tid": tid, "args": {"name": track}})
+        out.append({"name": "thread_sort_index", "ph": "M", "pid": _PID,
+                    "tid": tid, "args": {"sort_index": tid}})
+    for ev in events:
+        e: Dict[str, Any] = {
+            "name": ev.name, "cat": ev.cat, "ph": ev.ph,
+            "ts": 1e6 * (ev.ts - t0),
+            "pid": _PID, "tid": tids[ev.track],
+        }
+        if ev.ph == "X":
+            e["dur"] = 1e6 * ev.dur
+        if ev.ph == "i":
+            e["s"] = "t"                    # thread-scoped instant
+        if ev.ph == "C":
+            e["args"] = {ev.name: (ev.args or {}).get("value", 0)}
+        elif ev.args:
+            e["args"] = dict(ev.args)
+        out.append(e)
+    return {"traceEvents": out, "displayTimeUnit": "ms",
+            "otherData": {"dropped_events": tracer.dropped}}
+
+
+def write_trace(tracer: Tracer, path: str) -> str:
+    """Export ``tracer`` to ``path`` as trace-event JSON; returns path."""
+    doc = to_trace_events(tracer)
+    validate_trace(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+def validate_trace(doc: Dict[str, Any]) -> None:
+    """Assert the structural trace-event schema; raises ``ValueError``.
+
+    Checks what the viewers actually require: a ``traceEvents`` list,
+    name/ph/pid/tid on every event, numeric non-negative ``ts``, a
+    ``dur`` on every complete ("X") event, and metadata events carrying
+    their ``args.name``.  JSON-serializability is asserted too — a stray
+    device array in span args would otherwise only explode at dump time.
+    """
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise ValueError("trace document must have a traceEvents list")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError("traceEvents must be a list")
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            raise ValueError(f"event {i} is not an object")
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in e:
+                raise ValueError(f"event {i} missing {key!r}")
+        if not isinstance(e["name"], str) or not isinstance(e["ph"], str):
+            raise ValueError(f"event {i}: name/ph must be strings")
+        if e["ph"] == "M":
+            if "name" not in e.get("args", {}) and \
+                    "sort_index" not in e.get("args", {}):
+                raise ValueError(f"metadata event {i} missing args")
+            continue
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            raise ValueError(f"event {i}: bad ts {ts!r}")
+        if e["ph"] == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(f"event {i}: X event needs dur >= 0")
+    try:
+        json.dumps(doc)
+    except TypeError as exc:
+        raise ValueError(f"trace is not JSON-serializable: {exc}") from exc

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import RunStats
+from repro.obs.tracer import NULL_TRACER
 
 State = Dict[str, Any]
 BatchState = Dict[str, Any]     # opaque slot-pool state (continuous batching)
@@ -285,7 +286,7 @@ class ExecutionBackend(abc.ABC):
         copies = pg.adopt_prefix(slot, matched, blocks)
         if copies:
             self._record(RunStats(wall_s=0.0, dispatches=copies, shape_ops=0,
-                                  sync_mode="none"))
+                                  sync_mode="none"), op="cow_adopt")
         bstate["meta"][slot] = {"prompt": toks, "cursor": matched}
         return PagedAdmit(cached=matched, total=len(toks))
 
@@ -342,7 +343,7 @@ class ExecutionBackend(abc.ABC):
             enq = time.perf_counter() - t0
             self._record(RunStats(wall_s=enq, dispatches=1 + copies,
                                   shape_ops=0, sync_mode="none",
-                                  enqueue_s=enq))
+                                  enqueue_s=enq), op="prefill_chunk")
             pg.pool.set_arena(ak, av)
             return logits, nxt
         return run
@@ -411,6 +412,10 @@ class ExecutionBackend(abc.ABC):
     # -- uniform instrumentation ------------------------------------------
     def __init__(self) -> None:
         self._stats = DispatchStats()
+        #: optional span tracer (``repro.obs``).  NULL_TRACER's recording
+        #: calls are no-ops, so the hot path pays one branch when tracing
+        #: is off; the scheduler swaps a live tracer in when asked.
+        self.tracer = NULL_TRACER
 
     def dispatch_stats(self) -> DispatchStats:
         return self._stats
@@ -418,8 +423,23 @@ class ExecutionBackend(abc.ABC):
     def reset_stats(self) -> None:
         self._stats = DispatchStats()
 
-    def _record(self, rs: RunStats) -> None:
+    def _record(self, rs: RunStats, op: str = "dispatch") -> None:
+        """The SINGLE dispatch-accounting choke point: every backend
+        dispatch flows through here, updating ``dispatch_stats()`` AND —
+        when a tracer is attached — emitting one span on the backend's
+        dispatch lane whose ``dispatches`` arg carries the same count.
+        Trace-derived totals therefore equal the stats delta exactly
+        (the CI obs gate asserts it)."""
         self._stats.add(rs)
+        tr = self.tracer
+        if tr.enabled:
+            now = time.perf_counter()
+            tr.add(f"dispatch:{op}", now - rs.wall_s, rs.wall_s,
+                   cat="dispatch",
+                   track=f"backend:{self.capabilities.name}",
+                   args={"op": op, "dispatches": rs.dispatches,
+                         "enqueue_us": round(1e6 * rs.enqueue_s, 1),
+                         "sync_us": round(1e6 * rs.sync_s, 1)})
 
 
 # ---------------------------------------------------------------------------

@@ -392,26 +392,29 @@ class DistBackend(ExecutionBackend):
             jnp.asarray(tokens, jnp.int32))
         enq = time.perf_counter() - t0
         self._record(RunStats(wall_s=enq, dispatches=1 + copies, shape_ops=0,
-                              sync_mode="none", enqueue_s=enq))
+                              sync_mode="none", enqueue_s=enq),
+                     op="decode_batch")
         pg.pool.set_arena(ak, av)
         pg.advance(slots)
         return bstate, StepOutput(logits, nxt)
 
     # ------------------------------------------------------------------
-    def _run(self, fn, *args) -> Tuple[object, StepOutput]:
+    def _run(self, fn, *args, op: str = "dispatch"
+             ) -> Tuple[object, StepOutput]:
         t0 = time.perf_counter()
         cache, logits, nxt = fn(*args)
         enq = time.perf_counter() - t0
         self._record(RunStats(wall_s=enq, dispatches=1, shape_ops=0,
-                              sync_mode="none", enqueue_s=enq))
+                              sync_mode="none", enqueue_s=enq), op=op)
         return cache, StepOutput(logits, nxt)
 
     def prefill(self, tokens) -> Tuple[State, StepOutput]:
         tokens = jnp.asarray(tokens, jnp.int32)
-        cache, out = self._run(self._jit_prefill, self.params, tokens)
+        cache, out = self._run(self._jit_prefill, self.params, tokens,
+                               op="prefill")
         return {"cache": cache}, out
 
     def decode_step(self, state: State, tok) -> Tuple[State, StepOutput]:
         cache, out = self._run(self._jit_decode, self.params, state["cache"],
-                               jnp.asarray(tok, jnp.int32))
+                               jnp.asarray(tok, jnp.int32), op="decode")
         return {"cache": cache}, out

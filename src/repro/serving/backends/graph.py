@@ -98,7 +98,7 @@ class GraphBackend(ExecutionBackend):
         assert b == self.batch, f"backend built for batch={self.batch}, got {b}"
         eng = self._prefill_engine(plen)
         out, rs = eng.run({"tokens": tokens}, record_timeline=True)
-        self._record(rs)
+        self._record(rs, op="prefill")
         cache = kv.load_prefix(
             kv.empty_graph_cache(self.cfg, b, self.max_len), out,
             self.cfg.num_layers)
@@ -110,7 +110,7 @@ class GraphBackend(ExecutionBackend):
         inputs["tokens"] = jnp.asarray(tok, jnp.int32)
         inputs["pos"] = jnp.int32(state["pos"])
         out, rs = self._decode_engine.run(inputs, record_timeline=True)
-        self._record(rs)
+        self._record(rs, op="decode")
         cache = {}
         for l in range(self.cfg.num_layers):
             cache[f"k_cache_{l}"] = out[f"k_cache_{l}"]
@@ -170,7 +170,7 @@ class GraphBackend(ExecutionBackend):
         inputs["tokens"] = jnp.asarray(tokens, jnp.int32)
         inputs["pos"] = jnp.asarray(kvp.pos)
         out, rs = eng.run(inputs, record_timeline=True)
-        self._record(rs)
+        self._record(rs, op="decode_batch")
         kvp.tree = {f"{c}_cache_{l}": out[f"{c}_cache_{l}"]
                     for l in range(self.cfg.num_layers) for c in ("k", "v")}
         kvp.advance(slots)
@@ -236,7 +236,7 @@ class GraphBackend(ExecutionBackend):
         pg = bstate["paged"]
         if copies:
             self._record(RunStats(wall_s=0.0, dispatches=copies, shape_ops=0,
-                                  sync_mode="none"))
+                                  sync_mode="none"), op="cow_copy")
         eng = self._extend_engine(bstate, buf.shape[1])
         inputs = dict(pg.pool.tree)
         inputs["tokens"] = jnp.asarray(buf)
@@ -244,7 +244,7 @@ class GraphBackend(ExecutionBackend):
         inputs["valid"] = jnp.int32(valid)
         inputs["block_table"] = jnp.asarray(pg.table[slot:slot + 1])
         out, rs = eng.run(inputs, record_timeline=True)
-        self._record(rs)
+        self._record(rs, op="prefill_chunk")
         pg.pool.set_tree(out)
         return out["logits"], out["next_token"]
 
@@ -265,14 +265,14 @@ class GraphBackend(ExecutionBackend):
                                          int(pg.pos[s]) + 1)
         if copies:
             self._record(RunStats(wall_s=0.0, dispatches=copies, shape_ops=0,
-                                  sync_mode="none"))
+                                  sync_mode="none"), op="cow_copy")
         eng = bstate["decode_eng"]
         inputs = dict(pg.pool.tree)
         inputs["tokens"] = jnp.asarray(tokens, jnp.int32)
         inputs["pos"] = jnp.asarray(pg.pos)
         inputs["block_table"] = jnp.asarray(pg.table)
         out, rs = eng.run(inputs, record_timeline=True)
-        self._record(rs)
+        self._record(rs, op="decode_batch")
         pg.pool.set_tree(out)
         pg.advance(slots)
         return bstate, StepOutput(out["logits"], out["next_token"])

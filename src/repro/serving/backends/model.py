@@ -80,22 +80,24 @@ class ModelBackend(ExecutionBackend):
             speculative=batchable)
 
     # ------------------------------------------------------------------
-    def _run(self, fn, *args) -> Tuple[object, StepOutput]:
+    def _run(self, fn, *args, op: str = "dispatch"
+             ) -> Tuple[object, StepOutput]:
         t0 = time.perf_counter()
         cache, logits, nxt = fn(*args)
         enq = time.perf_counter() - t0  # async call until handle return
         self._record(RunStats(wall_s=enq, dispatches=1, shape_ops=0,
-                              sync_mode="none", enqueue_s=enq))
+                              sync_mode="none", enqueue_s=enq), op=op)
         return cache, StepOutput(logits, nxt)
 
     def prefill(self, tokens) -> Tuple[State, StepOutput]:
         tokens = jnp.asarray(tokens, jnp.int32)
-        cache, out = self._run(self._jit_prefill, self.params, tokens)
+        cache, out = self._run(self._jit_prefill, self.params, tokens,
+                               op="prefill")
         return {"cache": cache}, out
 
     def decode_step(self, state: State, tok) -> Tuple[State, StepOutput]:
         cache, out = self._run(self._jit_decode, self.params, state["cache"],
-                               jnp.asarray(tok, jnp.int32))
+                               jnp.asarray(tok, jnp.int32), op="decode")
         return {"cache": cache}, out
 
     # -- continuous batching -------------------------------------------
@@ -140,7 +142,8 @@ class ModelBackend(ExecutionBackend):
             jnp.asarray(kv.pos), jnp.asarray(tokens, jnp.int32))
         enq = time.perf_counter() - t0
         self._record(RunStats(wall_s=enq, dispatches=1, shape_ops=0,
-                              sync_mode="none", enqueue_s=enq))
+                              sync_mode="none", enqueue_s=enq),
+                     op="decode_batch")
         kv.tree = {"k": k, "v": v}
         kv.advance(slots)
         return bstate, StepOutput(logits, nxt)
@@ -179,7 +182,8 @@ class ModelBackend(ExecutionBackend):
             jnp.asarray(tokens, jnp.int32))
         enq = time.perf_counter() - t0
         self._record(RunStats(wall_s=enq, dispatches=1 + copies, shape_ops=0,
-                              sync_mode="none", enqueue_s=enq))
+                              sync_mode="none", enqueue_s=enq),
+                     op="decode_batch")
         pg.pool.set_arena(ak, av)
         pg.advance(slots)
         return bstate, StepOutput(logits, nxt)
@@ -206,6 +210,6 @@ class ModelBackend(ExecutionBackend):
             jnp.asarray(tokens, jnp.int32))
         enq = time.perf_counter() - t0
         self._record(RunStats(wall_s=enq, dispatches=1 + copies, shape_ops=0,
-                              sync_mode="none", enqueue_s=enq))
+                              sync_mode="none", enqueue_s=enq), op="verify")
         pg.pool.set_arena(ak, av)
         return bstate, StepOutput(logits, nxt)

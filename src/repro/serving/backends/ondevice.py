@@ -71,5 +71,6 @@ class OnDeviceBackend(ModelBackend):
                               n_new, sampler)
         enq = time.perf_counter() - t0
         self._record(RunStats(wall_s=enq, dispatches=1, shape_ops=0,
-                              sync_mode="none", enqueue_s=enq))
+                              sync_mode="none", enqueue_s=enq),
+                     op="ondevice_loop")
         return toks

@@ -33,7 +33,8 @@ class GenerationResult:
     ttft_s: float
     total_s: float
     n_new: int
-    dispatches_per_token: int
+    dispatches_per_token: int   # capability estimate (0 for ondevice)
+    dispatches: int = 0         # measured dispatch_stats() delta for the run
 
     @property
     def tok_per_s(self) -> float:
@@ -56,17 +57,32 @@ class GenerationEngine:
         self.backend = create_backend(mode, model, params, batch=batch,
                                       max_len=max_len)
         self.session = InferenceSession(self.backend)
-        self.dispatches_per_token = \
-            self.backend.capabilities.dispatches_per_token
+
+    @property
+    def dispatches_per_token(self) -> int:
+        """Delegates to the backend capability — a single accounting
+        source.  The engine used to snapshot this at construction, which
+        silently diverged when the backend's capabilities changed; now
+        the shim, the session, and the tracer all read the same field
+        and all MEASURED counts flow through ``dispatch_stats()``."""
+        return self.backend.capabilities.dispatches_per_token
+
+    def dispatch_stats(self):
+        return self.backend.dispatch_stats()
+
+    def reset_stats(self) -> None:
+        self.backend.reset_stats()
 
     # ------------------------------------------------------------------
     def generate(self, prompt: np.ndarray, n_new: int) -> GenerationResult:
         prompt = np.atleast_2d(np.asarray(prompt, np.int32))
         assert prompt.shape[0] == self.batch
+        d0 = self.backend.dispatch_stats().dispatches
         r = self.session.run(ServeRequest(prompt=prompt, max_new_tokens=n_new,
                                           readback=self.readback))
         return GenerationResult(r.tokens, r.ttft_s, r.total_s, r.n_new,
-                                self.dispatches_per_token)
+                                self.dispatches_per_token,
+                                self.backend.dispatch_stats().dispatches - d0)
 
     # ------------------------------------------------------------------
     def benchmark(self, prompt: np.ndarray, n_new: int, *, n_runs: int = 10,

@@ -251,6 +251,8 @@ class PagedKVCache:
         self._owned: Dict[int, List[int]] = {}
         self.radix = None                       # set by the owning backend
         self.cow_copies = 0
+        from repro.obs.tracer import NULL_TRACER
+        self.tracer = NULL_TRACER               # set by the scheduler
 
     # -- slot lifecycle (mirrors SlotKVCache) ---------------------------
     @property
@@ -307,6 +309,9 @@ class PagedKVCache:
         self.pool.copy_block(src, dst)
         self.pool.cow_forks += 1
         self.cow_copies += 1
+        if self.tracer.enabled:
+            self.tracer.instant("cow_fork", track="paging",
+                                src=src, dst=dst)
         return dst
 
     def adopt_prefix(self, slot: int, matched: int, blocks: Sequence[int]

@@ -62,6 +62,8 @@ class RadixPrefixCache:
         self.hit_tokens = 0
         self.evictions = 0
         self.inserted_tokens = 0
+        from repro.obs.tracer import NULL_TRACER
+        self.tracer = NULL_TRACER               # set by the scheduler
 
     # ------------------------------------------------------------------
     @property
@@ -118,6 +120,8 @@ class RadixPrefixCache:
             return 0, []
         self.hits += 1
         self.hit_tokens += i
+        if self.tracer.enabled:
+            self.tracer.instant("radix_hit", track="paging", tokens=i)
         return i, list(node.chain[:_ceildiv(i, self.block_size)])
 
     # ------------------------------------------------------------------
@@ -199,4 +203,7 @@ class RadixPrefixCache:
         victim.parent.children = {
             t: c for t, c in victim.parent.children.items() if c is not victim}
         self.evictions += 1
+        if self.tracer.enabled:
+            self.tracer.instant("radix_evict", track="paging",
+                                blocks=len(victim.chain))
         return True

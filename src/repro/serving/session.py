@@ -30,6 +30,8 @@ import jax
 import numpy as np
 
 from repro.core.stats import Summary, summarize
+from repro.obs.metrics import MetricsRegistry, percentile
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.serving.backends.base import ExecutionBackend, StepOutput
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.spec import (Drafter, NgramDrafter, SpeculativeConfig,
@@ -284,6 +286,9 @@ class SchedulerStats:
     occupancy_sum: int = 0           # Σ active slots per cycle
     wall_s: float = 0.0
     queue_waits_s: List[float] = dataclasses.field(default_factory=list)
+    # per-request serving latency samples (filled when the run drains)
+    ttfts_s: List[float] = dataclasses.field(default_factory=list)
+    tpots_s: List[float] = dataclasses.field(default_factory=list)
     # paged KV / prefix cache / chunked prefill (kv_layout == "paged")
     prefill_chunks: int = 0          # extend dispatches issued
     prefix_hits: int = 0             # admissions with a nonzero radix match
@@ -335,6 +340,32 @@ class SchedulerStats:
         """Fraction of drafted tokens the target's argmax agreed with."""
         return self.draft_tokens_accepted / max(self.draft_tokens_proposed, 1)
 
+    # -- serving-latency percentiles (linear interpolation, numpy rule) --
+    @property
+    def ttft_p50_ms(self) -> float:
+        return 1e3 * percentile(self.ttfts_s, 50)
+
+    @property
+    def ttft_p99_ms(self) -> float:
+        return 1e3 * percentile(self.ttfts_s, 99)
+
+    @property
+    def tpot_p50_ms(self) -> float:
+        """Time-per-output-token: (total − ttft) / (n_new − 1) per request."""
+        return 1e3 * percentile(self.tpots_s, 50)
+
+    @property
+    def tpot_p99_ms(self) -> float:
+        return 1e3 * percentile(self.tpots_s, 99)
+
+    @property
+    def queue_wait_p50_ms(self) -> float:
+        return 1e3 * percentile(self.queue_waits_s, 50)
+
+    @property
+    def queue_wait_p99_ms(self) -> float:
+        return 1e3 * percentile(self.queue_waits_s, 99)
+
     @property
     def dispatches_per_accepted_token(self) -> float:
         """Target dispatches per token emitted on the speculative path —
@@ -361,6 +392,12 @@ class SchedulerStats:
         d["kv_utilization"] = self.kv_utilization
         d["acceptance_rate"] = self.acceptance_rate
         d["dispatches_per_accepted_token"] = self.dispatches_per_accepted_token
+        d["ttft_p50_ms"] = self.ttft_p50_ms
+        d["ttft_p99_ms"] = self.ttft_p99_ms
+        d["tpot_p50_ms"] = self.tpot_p50_ms
+        d["tpot_p99_ms"] = self.tpot_p99_ms
+        d["queue_wait_p50_ms"] = self.queue_wait_p50_ms
+        d["queue_wait_p99_ms"] = self.queue_wait_p99_ms
         return d
 
     @classmethod
@@ -385,6 +422,12 @@ class SchedulerStats:
             "queue_wait_ms_mean": round(
                 1e3 * (sum(self.queue_waits_s)
                        / max(len(self.queue_waits_s), 1)), 2),
+            "ttft_p50_ms": round(self.ttft_p50_ms, 2),
+            "ttft_p99_ms": round(self.ttft_p99_ms, 2),
+            "tpot_p50_ms": round(self.tpot_p50_ms, 2),
+            "tpot_p99_ms": round(self.tpot_p99_ms, 2),
+            "queue_wait_p50_ms": round(self.queue_wait_p50_ms, 2),
+            "queue_wait_p99_ms": round(self.queue_wait_p99_ms, 2),
             "prefill_chunks": self.prefill_chunks,
             "prefix_hit_rate": round(self.prefix_hit_rate, 3),
             "prefix_hit_tokens": self.prefix_hit_tokens,
@@ -462,7 +505,9 @@ class Scheduler:
                  prefix_cache: bool = True, block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  async_readback: bool = True,
-                 speculative=None) -> None:
+                 speculative=None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None) -> None:
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if kv_layout not in ("dense", "paged"):
@@ -497,6 +542,12 @@ class Scheduler:
         self._submit_t: Dict[str, float] = {}
         self._bstate: Optional[Dict[str, Any]] = None
         self.last_stats: Optional[SchedulerStats] = None
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        if self.tracer.enabled:
+            # one accounting source: the backend's _record choke point
+            # emits the dispatch-lane spans the CI consistency gate sums
+            session.backend.tracer = self.tracer
 
     def submit(self, req: ServeRequest) -> str:
         self._queue.append(req)
@@ -539,8 +590,30 @@ class Scheduler:
         st.wall_s = time.perf_counter() - t0
         st.dispatches = backend.dispatch_stats().dispatches - d0
         st.completed = len(results)
+        for r in results.values():
+            st.ttfts_s.append(r.ttft_s)
+            if r.n_new > 1:
+                st.tpots_s.append((r.total_s - r.ttft_s) / (r.n_new - 1))
+        if self.metrics is not None:
+            self._publish_metrics(st)
         self.last_stats = st
         return results
+
+    def _publish_metrics(self, st: SchedulerStats) -> None:
+        """Fold one run's accounting into the attached registry."""
+        m = self.metrics
+        m.counter("serving.tokens").inc(st.tokens)
+        m.counter("serving.dispatches").inc(st.dispatches)
+        m.counter("serving.cycles").inc(st.cycles)
+        m.counter("serving.completed").inc(st.completed)
+        m.gauge("serving.mean_occupancy").set(st.mean_occupancy)
+        m.gauge("serving.dispatches_per_token").set(st.dispatches_per_token)
+        for v in st.ttfts_s:
+            m.histogram("serving.ttft_s").observe(v)
+        for v in st.tpots_s:
+            m.histogram("serving.tpot_s").observe(v)
+        for v in st.queue_waits_s:
+            m.histogram("serving.queue_wait_s").observe(v)
 
     # -- shared cycle plumbing ------------------------------------------
     @staticmethod
@@ -563,7 +636,10 @@ class Scheduler:
                      st: SchedulerStats, tokens):
         """ONE batched decode dispatch for every active slot."""
         slots = tuple(sorted(active))
-        bstate, out = self.session.backend.decode_batch(bstate, tokens, slots)
+        with self.tracer.span("decode_cycle", track="scheduler",
+                              cycle=st.cycles, occupancy=len(slots)):
+            bstate, out = self.session.backend.decode_batch(bstate, tokens,
+                                                            slots)
         st.cycles += 1
         st.occupancy_sum += len(slots)
         self._track_kv(bstate, st)
@@ -589,26 +665,32 @@ class Scheduler:
                       st: SchedulerStats, *, overlapped: bool):
         """Read a cycle's tokens back and feed each slot its row."""
         backend = self.session.backend
+        tr = self.tracer
         t0 = time.perf_counter()
         # one host readback per CYCLE (not per slot) in the greedy
         # token-readback regime: a (num_slots,) int32 vector
         nxt = (np.asarray(out.next_token, np.int32)
                if out.next_token is not None else None)
         dt = time.perf_counter() - t0
+        tr.add("readback", t0, dt, cat="phase", track="scheduler",
+               args={"overlapped": overlapped})
         if overlapped:
             st.overlap_readback_s += dt
         else:
             st.sync_readback_s += dt
-        for s in slots:
-            a = active[s]
-            row = StepOutput(out.logits[s:s + 1],
-                             None if nxt is None else nxt[s:s + 1])
-            st.tokens += 1
-            if self.session.step_row(a, row):
-                results[a.req.request_id] = self.session.finish(a)
-                bstate = backend.release_slot(bstate, s,
-                                              tokens=self._realized(a))
-                del active[s]
+        with tr.span("sample_emit", track="scheduler", slots=len(slots)):
+            for s in slots:
+                a = active[s]
+                row = StepOutput(out.logits[s:s + 1],
+                                 None if nxt is None else nxt[s:s + 1])
+                st.tokens += 1
+                if self.session.step_row(a, row):
+                    results[a.req.request_id] = self.session.finish(a)
+                    bstate = backend.release_slot(bstate, s,
+                                                  tokens=self._realized(a))
+                    tr.instant("release", track=f"slot{s}",
+                               req=a.req.request_id, n_new=len(a.tokens))
+                    del active[s]
         return bstate
 
     def _async_safe(self, active: Dict[int, "_Active"]) -> bool:
@@ -633,8 +715,11 @@ class Scheduler:
                and self._async_safe(active)
                and all(len(active[s].tokens) + 1
                        < active[s].req.max_new_tokens for s in slots)):
-            bstate, out_next = backend.decode_batch(bstate, out.next_token,
-                                                    slots)
+            with self.tracer.span("decode_cycle", track="scheduler",
+                                  cycle=st.cycles, occupancy=len(slots),
+                                  overlapped=True):
+                bstate, out_next = backend.decode_batch(bstate,
+                                                        out.next_token, slots)
             st.cycles += 1
             st.occupancy_sum += len(slots)
             st.overlap_cycles += 1
@@ -659,7 +744,9 @@ class Scheduler:
             while self._queue and len(active) < self.num_slots:
                 req = self._queue.pop(0)
                 self._check_row(req)
-                a = self._start(req, st)
+                with self.tracer.span("admit", track="scheduler",
+                                      req=req.request_id):
+                    a = self._start(req, st)
                 if a.done:
                     results[a.req.request_id] = self.session.finish(a)
                     continue
@@ -720,26 +807,30 @@ class Scheduler:
         tokens = np.zeros((self.num_slots, width), np.int32)
         spans, drafts, forks = [], {}, {}
         disp0 = drafter.dispatches
-        for s in slots:
-            a = active[s]
-            tokens[s, 0] = a.last_tok[0, 0]
-            d = np.zeros((0,), np.int32)
-            if self._spec_eligible(a):
-                # never draft past the token budget: the final emission
-                # must stay the bonus/decode token so pos bookkeeping
-                # matches the autoregressive invariant exactly
-                cap = min(k, a.req.max_new_tokens - len(a.tokens) - 1)
-                if cap > 0:
-                    d = np.asarray(
-                        drafter.propose(s, self._realized(a), cap),
-                        np.int32).reshape(-1)[:cap]
-            if d.size:
-                forks[s] = pg.fork_slot(s)
-                drafts[s] = d
-                tokens[s, 1:1 + d.size] = d
-            spans.append(1 + d.size)
+        tr = self.tracer
+        with tr.span("draft", track="scheduler", occupancy=len(slots)):
+            for s in slots:
+                a = active[s]
+                tokens[s, 0] = a.last_tok[0, 0]
+                d = np.zeros((0,), np.int32)
+                if self._spec_eligible(a):
+                    # never draft past the token budget: the final emission
+                    # must stay the bonus/decode token so pos bookkeeping
+                    # matches the autoregressive invariant exactly
+                    cap = min(k, a.req.max_new_tokens - len(a.tokens) - 1)
+                    if cap > 0:
+                        d = np.asarray(
+                            drafter.propose(s, self._realized(a), cap),
+                            np.int32).reshape(-1)[:cap]
+                if d.size:
+                    forks[s] = pg.fork_slot(s)
+                    drafts[s] = d
+                    tokens[s, 1:1 + d.size] = d
+                spans.append(1 + d.size)
         st.draft_dispatches += drafter.dispatches - disp0
-        bstate, out = backend.verify_paged(bstate, tokens, slots, spans)
+        with tr.span("verify", track="scheduler", occupancy=len(slots),
+                     cycle=st.cycles):
+            bstate, out = backend.verify_paged(bstate, tokens, slots, spans)
         st.cycles += 1
         st.spec_cycles += 1
         st.verify_dispatches += 1
@@ -747,7 +838,10 @@ class Scheduler:
         self._track_kv(bstate, st)
         t0 = time.perf_counter()
         nxt = np.asarray(out.next_token, np.int32)       # (S, width)
-        st.sync_readback_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        st.sync_readback_s += dt
+        tr.add("readback", t0, dt, cat="phase", track="scheduler",
+               args={"overlapped": False})
         for s in slots:
             a = active[s]
             d = drafts.get(s)
@@ -781,6 +875,9 @@ class Scheduler:
                 # commit exactly the consumed inputs; everything past is
                 # dropped by decref/pos-rewind — never a KV copy
                 pg.commit_fork(s, forks[s], forks[s].pos0 + emitted)
+                tr.instant("spec_commit", track=f"slot{s}",
+                           proposed=int(d.size), accepted=accepted,
+                           emitted=emitted)
             if done:
                 results[a.req.request_id] = self.session.finish(a)
                 bstate = backend.release_slot(bstate, s,
@@ -809,6 +906,10 @@ class Scheduler:
         bstate = self._bstate
         pg = bstate["paged"]
         radix = bstate["radix"]
+        if self.tracer.enabled:
+            pg.tracer = self.tracer
+            if radix is not None:
+                radix.tracer = self.tracer
         cow0 = pg.cow_copies
         ev0 = radix.evictions if radix is not None else 0
         results: Dict[str, ServeResult] = {}
@@ -823,7 +924,9 @@ class Scheduler:
                 self._book_admission(a, st)
                 slot = min(s for s in range(self.num_slots)
                            if s not in active and s not in prefilling)
-                info = backend.admit_paged(bstate, slot, prompt)
+                with self.tracer.span("admit", track="scheduler",
+                                      req=req.request_id, slot=slot):
+                    info = backend.admit_paged(bstate, slot, prompt)
                 if info.cached:
                     st.prefix_hits += 1
                     st.prefix_hit_tokens += info.cached
@@ -833,7 +936,8 @@ class Scheduler:
             # decode cycle below — a long prompt admits over many cycles
             # without ever stalling the slots already decoding
             for slot in sorted(prefilling):
-                out = backend.prefill_paged_chunk(bstate, slot)
+                with self.tracer.span("prefill_chunk", track=f"slot{slot}"):
+                    out = backend.prefill_paged_chunk(bstate, slot)
                 st.prefill_chunks += 1
                 if out is None:
                     continue
