@@ -13,7 +13,7 @@ from repro.core.crossover import as_dicts, crossover_table
 from repro.core.dispatch import measure_dispatch_cost, sync_overhead_us
 from repro.core.overhead import OverheadAccounting
 from repro.models import build_model
-from repro.serving.engine import GenerationEngine
+from repro.serving import InferenceSession, create_backend
 
 
 def main() -> None:
@@ -34,8 +34,9 @@ def main() -> None:
     prompt = np.array([[11, 23, 37, 41, 53]], np.int32)
     reps = {}
     for lvl in ("F0", "F1", "F3"):
-        eng = GenerationEngine(model, params, mode=lvl, batch=1, max_len=40)
-        reps[lvl] = eng.benchmark(prompt, 20, n_runs=5, warmup=2)
+        session = InferenceSession(
+            create_backend(lvl, model, params, batch=1, max_len=40))
+        reps[lvl] = session.benchmark(prompt, 20, n_runs=5, warmup=2)
         r = reps[lvl]
         print(f"   {lvl}: {r.dispatches_per_token:4d} disp/tok  "
               f"{r.tok_per_s.mean:6.1f} tok/s  TTFT {r.ttft_ms.mean:6.1f} ms")

@@ -3,7 +3,8 @@
 
 The repo commits its benchmark payloads (``BENCH_serving.json``,
 ``BENCH_paging.json``, ``BENCH_paging_graph.json``, ``BENCH_spec.json``,
-``BENCH_obs.json``) as the performance trajectory.  CI regenerates them fresh every run; this script diffs the
+``BENCH_obs.json``, ``BENCH_traffic.json``) as the performance
+trajectory.  CI regenerates them fresh every run; this script diffs the
 fresh copies against the committed baselines (``git show <ref>:<file>``)
 and FAILS on a >15% regression in the throughput trajectory.
 
@@ -106,12 +107,35 @@ def _obs_metrics(data: Dict) -> Dict[str, Metric]:
     return out
 
 
+def _traffic_metrics(data: Dict) -> Dict[str, Metric]:
+    out: Dict[str, Metric] = {}
+    # deterministic: the structural facts of the oversubscription run —
+    # every request completed, greedy parity byte-exact, preemption
+    # engaged, priority inversion absent — are booleans, never noise
+    for key in ("gate_no_starvation", "gate_parity_exact",
+                "gate_preemption_engaged", "gate_hi_pri_p99_le_lo_pri",
+                "gate_hi_pri_p99_bounded"):
+        out[key] = (1.0 if data.get(key) else 0.0, "higher", HARD)
+    for row in data.get("rows", []):
+        key = f"{row['oversubscription']:g}x"
+        # wall-clock latency/goodput: warn-only on shared runners
+        out[f"ttft_p99_ms[{key}]"] = (row["ttft_p99_ms"], "lower", SOFT)
+        out[f"ttft_p99_hi_ms[{key}]"] = (
+            row["ttft_p99_hi_ms"], "lower", SOFT)
+        out[f"goodput_tok_s[{key}]"] = (
+            row["goodput_tok_s"], "higher", SOFT)
+        out[f"slo_attainment[{key}]"] = (
+            row["slo_attainment"], "higher", SOFT)
+    return out
+
+
 EXTRACTORS = {
     "serving": _serving_metrics,
     "paging": _paging_metrics,
     "paging_graph": _paging_metrics,
     "spec": _spec_metrics,
     "obs": _obs_metrics,
+    "traffic": _traffic_metrics,
 }
 
 
@@ -182,7 +206,7 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("benchmarks", nargs="*",
                     default=["serving", "paging", "paging_graph", "spec",
-                             "obs"],
+                             "obs", "traffic"],
                     help="benchmark names (BENCH_<name>.json)")
     ap.add_argument("--baseline-ref", default="HEAD",
                     help="git ref holding the committed baselines")

@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Relative-link checker for the repo's Markdown doc set.
+
+``docs/ARCHITECTURE.md`` is a map of the codebase: its value is that
+every file it names exists and every anchor it cites resolves.  A map
+whose links rot is worse than no map — it teaches readers the wrong
+layout with full confidence.  CI runs this over every tracked ``*.md``
+file and fails on:
+
+* a relative link whose target path does not exist
+  (``[x](docs/missing.md)``, ``[y](src/gone.py#L12)``), and
+* an intra-document anchor with no matching heading
+  (``[z](#no-such-section)``), using GitHub's slug rules
+  (lowercase, spaces → dashes, punctuation dropped).
+
+External links (``http://``/``https://``/``mailto:``) are deliberately
+NOT fetched: network checks are flaky in CI and the failure mode they
+catch (a remote site dying) is not something a commit can regress.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+from typing import Dict, List, Set, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# inline links [text](target); images ![alt](target) match the same way
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+_FENCE = re.compile(r"^\s*(```|~~~)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _tracked_markdown() -> List[str]:
+    r = subprocess.run(["git", "ls-files", "*.md", "**/*.md"],
+                       cwd=REPO, capture_output=True, text=True, check=True)
+    return sorted(set(r.stdout.split()))
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading→anchor slug: strip markup, lowercase, drop
+    punctuation, spaces to dashes."""
+    s = re.sub(r"[`*_]", "", heading).strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _parse(path: str) -> Tuple[List[Tuple[int, str]], Set[str]]:
+    """Return ([(line_no, target)], {anchor slugs}) for one file,
+    skipping fenced code blocks (link syntax inside them is literal)."""
+    links: List[Tuple[int, str]] = []
+    slugs: Set[str] = set()
+    seen: Dict[str, int] = {}
+    in_fence = False
+    with open(os.path.join(REPO, path), encoding="utf-8") as f:
+        for ln, line in enumerate(f, 1):
+            if _FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING.match(line)
+            if m:
+                slug = github_slug(m.group(1))
+                n = seen.get(slug, 0)
+                seen[slug] = n + 1
+                slugs.add(slug if n == 0 else f"{slug}-{n}")
+            for lm in _LINK.finditer(line):
+                links.append((ln, lm.group(1)))
+    return links, slugs
+
+
+def check(files: List[str]) -> List[str]:
+    parsed = {p: _parse(p) for p in files}
+    errors: List[str] = []
+    for path, (links, own_slugs) in parsed.items():
+        base = os.path.dirname(path)
+        for ln, target in links:
+            if target.startswith(_EXTERNAL):
+                continue
+            rel, _, frag = target.partition("#")
+            if not rel:                       # intra-document #anchor
+                if frag and frag.lower() not in own_slugs:
+                    errors.append(f"{path}:{ln}: broken anchor "
+                                  f"'#{frag}' (no such heading)")
+                continue
+            # GitHub line fragments (#L12) and heading anchors on files
+            full = os.path.normpath(os.path.join(base, rel))
+            if full.startswith(".."):
+                # escapes the checkout (e.g. the CI badge resolved
+                # against github.com) — not checkable from a worktree
+                continue
+            abspath = os.path.join(REPO, full)
+            if not os.path.exists(abspath):
+                errors.append(f"{path}:{ln}: broken link '{target}' "
+                              f"({full} does not exist)")
+                continue
+            if frag and not frag.startswith("L") and full in parsed:
+                if frag.lower() not in parsed[full][1]:
+                    errors.append(f"{path}:{ln}: broken anchor "
+                                  f"'{target}' (no heading '#{frag}' "
+                                  f"in {full})")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*",
+                    help="markdown files to check (default: all tracked)")
+    args = ap.parse_args()
+    files = args.files or _tracked_markdown()
+    errors = check(files)
+    for e in errors:
+        print(e)
+    print(f"docs link check: {len(files)} file(s), "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

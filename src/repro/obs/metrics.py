@@ -102,6 +102,15 @@ class Histogram:
         """q in [0, 100] over the retained samples."""
         return percentile(self._samples, q)
 
+    def fraction_below(self, threshold: float) -> float:
+        """Fraction of retained samples ≤ ``threshold`` — SLO attainment
+        read straight off a latency histogram (1.0 when empty: no sample
+        has violated an objective nobody was measured against)."""
+        if not self._samples:
+            return 1.0
+        return sum(1 for v in self._samples if v <= threshold) \
+            / len(self._samples)
+
     def to_dict(self) -> Dict[str, float]:
         return {
             "count": self.count,

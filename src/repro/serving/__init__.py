@@ -13,6 +13,8 @@ from repro.serving.session import (BenchmarkReport, InferenceSession,
                                    ServeResult)
 from repro.serving.spec import (Drafter, ModelDrafter, NgramDrafter,
                                 SpeculativeConfig)
+from repro.serving.traffic import (PoissonArrivals, ReplayArrivals,
+                                   TrafficRequest, synthesize_workload)
 
 __all__ = [
     "BackendCapabilities", "DispatchStats", "ExecutionBackend", "StepOutput",
@@ -22,4 +24,6 @@ __all__ = [
     "ServeRequest", "ServeResult", "SlotKVCache",
     "BlockPool", "PagedKVCache", "RadixPrefixCache",
     "Drafter", "ModelDrafter", "NgramDrafter", "SpeculativeConfig",
+    "PoissonArrivals", "ReplayArrivals", "TrafficRequest",
+    "synthesize_workload",
 ]

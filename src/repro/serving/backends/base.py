@@ -75,6 +75,11 @@ class BackendCapabilities:
     speculative: bool = False       # verify_paged(): score a drafted span
                                     # per slot in ONE batched dispatch over
                                     # the paged KV (requires paged_kv)
+    preemption: bool = False        # swap_out_paged()/swap_in_paged(): a
+                                    # slot's block chain can move to host
+                                    # memory and back byte-exactly, so the
+                                    # scheduler may preempt it (requires
+                                    # paged_kv + the stacked arena layout)
 
 
 @dataclasses.dataclass
@@ -239,7 +244,22 @@ class ExecutionBackend(abc.ABC):
                           num_blocks: Optional[int] = None,
                           prefix_cache: bool = True,
                           spec_slack: int = 0) -> BatchState:
-        """A paged batch state: block pool + per-slot tables (+ radix)."""
+        """A paged batch state: block pool + per-slot tables (+ radix).
+
+        Args:
+          num_slots: concurrent request slots (block-table rows).
+          block_size: tokens per KV block — the sharing/COW granularity
+            of the arena and the radix cache.
+          prefill_chunk: prompt tokens per ``prefill_paged_chunk`` call;
+            ``None`` prefills whole prompts in one extend dispatch.
+          num_blocks: arena capacity; ``None`` sizes for every slot full
+            plus two spare prefix-cache chains (see ``PagedKVCache``).
+          prefix_cache: attach a ``RadixPrefixCache`` so ``admit_paged``
+            can adopt shared prefixes by reference.
+          spec_slack: extra table width for speculative verify, whose
+            span may overhang ``max_len`` by the draft width before a
+            rejection rewinds it (``Scheduler`` passes ``k + 1``).
+        """
         raise NotImplementedError(
             f"{self.capabilities.name!r} has no paged-KV support")
 
@@ -271,7 +291,19 @@ class ExecutionBackend(abc.ABC):
                     ) -> "PagedAdmit":
         """Bind a prompt to ``slot``: radix prefix match, shared-block
         adoption (COW at a partial boundary), chunk cursor setup.  Cheap —
-        the prefill compute happens in ``prefill_paged_chunk``."""
+        the prefill compute happens in ``prefill_paged_chunk``.
+
+        Args:
+          bstate: a paged batch state from ``alloc_slots_paged``.
+          slot: a free slot index; its block table and ``meta`` entry
+            (prompt array + chunk cursor) are initialized here.
+          prompt: host token ids, any array-like; the match is capped at
+            ``len(prompt) - 1`` so the last token always runs through the
+            extend path and first-token logits exist.
+
+        Returns ``PagedAdmit(cached, total)`` — the radix-cache hit depth
+        versus the prompt length, i.e. how much prefill is skipped.
+        """
         if "paged" not in bstate:
             raise NotImplementedError(
                 f"{self.capabilities.name!r} has no paged-KV support")
@@ -292,9 +324,19 @@ class ExecutionBackend(abc.ABC):
 
     def prefill_paged_chunk(self, bstate: BatchState, slot: int
                             ) -> Optional[StepOutput]:
-        """Run the next prefill chunk for ``slot`` (one dispatch).  Returns
-        the first-token ``StepOutput`` when the prompt completes (the
-        finished prefix is inserted into the radix cache), else None."""
+        """Run the next prefill chunk for ``slot`` (one dispatch).
+
+        Args:
+          bstate: a paged batch state with ``slot`` admitted via
+            ``admit_paged``; the chunk width comes from ``bstate["chunk"]``
+            (``None`` → the whole remaining prompt in one extend).
+          slot: a slot mid-prefill (its meta cursor < prompt length).
+
+        Returns the first-token ``StepOutput`` when the prompt completes
+        (the finished FULL-block prefix is inserted into the radix cache),
+        else ``None`` — the scheduler interleaves these calls with
+        ``decode_batch`` cycles for chunked prefill.
+        """
         raise NotImplementedError(
             f"{self.capabilities.name!r} has no paged-KV support")
 
@@ -365,6 +407,63 @@ class ExecutionBackend(abc.ABC):
         """
         raise NotImplementedError(
             f"{self.capabilities.name!r} has no speculative verify")
+
+    def swap_out_paged(self, bstate: BatchState, slot: int) -> Dict[str, Any]:
+        """Preempt ``slot``: move its block chain off the arena, free the
+        slot.
+
+        Shared blocks (radix/COW, refcount > 1) transfer their reference
+        into the returned record without touching device memory; exclusive
+        blocks are copied to host numpy and freed — that is the arena
+        capacity the preemption reclaims (the ``dist/elastic.py`` idiom:
+        host arrays carry no placement assumptions, so restore is a plain
+        re-upload).  Zero dispatches; the host readback is accounted as a
+        ``swap_out`` op.
+
+        Args:
+          bstate: a paged batch state (``capabilities.preemption`` only).
+          slot: the victim slot; its table row is cleared and its meta
+            entry (prompt + chunk cursor) is captured in the record.
+
+        Returns an opaque record for ``swap_in_paged``.  The caller owns
+        it: restore exactly once, or discard via
+        ``bstate["paged"].drop_swap(record["chain"])``.
+        """
+        if "paged" not in bstate or not self.capabilities.preemption:
+            raise NotImplementedError(
+                f"{self.capabilities.name!r} has no preemption support")
+        pg = bstate["paged"]
+        chain = pg.swap_out(slot)
+        self._record(RunStats(wall_s=0.0, dispatches=0, shape_ops=0,
+                              sync_mode="none"), op="swap_out")
+        return {"chain": chain, "meta": bstate["meta"].pop(slot, None)}
+
+    def swap_in_paged(self, bstate: BatchState, swap: Dict[str, Any],
+                      slot: Optional[int] = None) -> int:
+        """Restore a ``swap_out_paged`` record into a (possibly different)
+        slot, byte-exactly.
+
+        Retained shared blocks re-bind by table assignment (no device
+        work); host-copied blocks upload one dispatch each, recorded as a
+        ``swap_in`` op so dispatch accounting and the tracer stay exact.
+
+        Args:
+          bstate: the same paged batch state the record came from.
+          swap: the record returned by ``swap_out_paged``.
+          slot: destination slot; ``None`` picks any free one.
+
+        Returns the slot the chain landed in; the slot's meta (prompt +
+        cursor) is restored so decode resumes exactly where it stopped.
+        """
+        pg = bstate["paged"]
+        t0 = time.perf_counter()
+        slot, uploads = pg.swap_in(swap["chain"], slot)
+        enq = time.perf_counter() - t0
+        self._record(RunStats(wall_s=enq, dispatches=uploads, shape_ops=0,
+                              sync_mode="none", enqueue_s=enq), op="swap_in")
+        if swap["meta"] is not None:
+            bstate["meta"][slot] = swap["meta"]
+        return slot
 
     def _finish_paged_prefill(self, bstate: BatchState, slot: int) -> None:
         """Shared end-of-prompt bookkeeping: cache the prompt's FULL blocks

@@ -77,7 +77,7 @@ class ModelBackend(ExecutionBackend):
         self.capabilities = BackendCapabilities(
             name=mode, dispatches_per_token=1, device_argmax=True,
             decode_batch=batchable, paged_kv=batchable,
-            speculative=batchable)
+            speculative=batchable, preemption=batchable)
 
     # ------------------------------------------------------------------
     def _run(self, fn, *args, op: str = "dispatch"

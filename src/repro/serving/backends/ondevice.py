@@ -53,6 +53,7 @@ class OnDeviceBackend(ModelBackend):
             decode_batch=self.capabilities.decode_batch,  # inherited rows path
             paged_kv=self.capabilities.paged_kv,          # inherited paged path
             speculative=self.capabilities.speculative,    # inherited verify
+            preemption=self.capabilities.preemption,      # inherited swap
         )
 
     def generate_ondevice(self, state: State, first_tok, n_new: int,

@@ -1,6 +1,7 @@
 """Paged KV-cache subsystem: fixed-size block arena + radix prefix cache
 + block-table-aware attention (paged decode, chunked-prefill extend)."""
-from repro.serving.paging.allocator import BlockPool, PagedKVCache, SlotFork
+from repro.serving.paging.allocator import (BlockPool, PagedKVCache,
+                                            SlotFork, SwappedChain)
 from repro.serving.paging.attention import (decode_step_paged,
                                             extend_step_paged, gather_blocks,
                                             verify_step_paged)
@@ -8,6 +9,7 @@ from repro.serving.paging.radix import RadixPrefixCache
 
 __all__ = [
     "BlockPool", "PagedKVCache", "RadixPrefixCache", "SlotFork",
+    "SwappedChain",
     "decode_step_paged", "extend_step_paged", "gather_blocks",
     "verify_step_paged",
 ]

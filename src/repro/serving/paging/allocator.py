@@ -48,6 +48,14 @@ def _copy_block(ak, av, src, dst):
     return cp(ak), cp(av)
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _load_block(ak, av, kb, vb, dst):
+    """Host→device block upload (the swap-in path): arena[dst] = host KV."""
+    def ld(a, row):
+        return jax.lax.dynamic_update_index_in_dim(a, row, dst, 0)
+    return ld(ak, kb), ld(av, vb)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _copy_block_tree(tree, src, dst):
     """Graph-layout COW fork: one executable copying block ``src`` → ``dst``
@@ -214,6 +222,41 @@ class SlotFork:
     slot: int
     pos0: int
     n_owned0: int
+
+
+@dataclasses.dataclass
+class SwappedChain:
+    """Host-resident image of one preempted slot's block chain.
+
+    The swap-out mirrors ``dist/elastic.py``'s cross-mesh restore idiom:
+    state leaves the device as plain host numpy carrying no arena
+    assumptions, so the restore can land it on ANY free blocks of the
+    (possibly differently occupied) arena — the block table re-binds
+    logical positions to whatever physical blocks ``swap_in`` allocates.
+
+    Two kinds of entry, keyed by logical block index:
+
+    * ``retained`` — blocks the radix cache (or another slot) still
+      references.  The victim's own pool reference is MOVED into this
+      record (no decref at swap-out, no incref at swap-in), so shared
+      prefixes cost zero bytes of host memory and zero copy dispatches
+      in either direction, and their refcounts are preserved exactly.
+    * ``host``     — blocks the victim owned exclusively: their KV is
+      copied to host and the block freed, which is the memory the
+      preemption actually reclaims.  ``swap_in`` re-uploads each into a
+      freshly allocated block (one dispatch per block).
+    """
+    pos: int                                    # committed valid length
+    retained: Dict[int, int]                    # logical idx → block id
+    host: Dict[int, Tuple[np.ndarray, np.ndarray]]  # logical idx → (k, v)
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.retained) + len(self.host)
+
+    @property
+    def host_bytes(self) -> int:
+        return sum(k.nbytes + v.nbytes for k, v in self.host.values())
 
 
 class PagedKVCache:
@@ -424,6 +467,101 @@ class PagedKVCache:
         """Block ids covering the first ``tokens`` positions of ``slot``."""
         return [int(self.table[slot, i])
                 for i in range(_ceildiv(tokens, self.block_size))]
+
+    # -- preemption: swap block chains to host memory and back -----------
+    def swap_out(self, slot: int) -> SwappedChain:
+        """Preempt ``slot``: move its block chain off the arena.
+
+        Shared blocks (refcount > 1 — radix-cache chains, other slots)
+        keep their device residency and their refcount: the slot's own
+        reference transfers into the returned :class:`SwappedChain`
+        instead of dropping.  Exclusively-owned blocks are copied to host
+        and freed — this is the arena capacity the preemptor reclaims.
+        The slot itself is released (table row reset, ``pos`` zeroed) so
+        a higher-priority admission can take it immediately.
+
+        Returns the chain record ``swap_in`` restores from; the round
+        trip is byte-exact (tested), so a restored request's greedy
+        stream is identical to an unpreempted run.
+        """
+        if slot not in self._live:
+            raise RuntimeError(f"swap_out of unallocated slot {slot}")
+        if self.pool.layout != "stacked":
+            raise NotImplementedError(
+                "swap_out supports the stacked arena layout (model/"
+                "ondevice backends); graph/dist arenas cannot swap yet")
+        pos = int(self.pos[slot])
+        n = _ceildiv(pos, self.block_size)
+        chain_ids = {int(self.table[slot, i]) for i in range(n)}
+        retained: Dict[int, int] = {}
+        host: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        ak = av = None
+        for i in range(n):
+            bid = int(self.table[slot, i])
+            if self.pool.refcount[bid] > 1:
+                # reference MOVES into the record: no decref here, no
+                # incref on restore — refcounts are preserved exactly
+                retained[i] = bid
+            else:
+                if ak is None:      # one host fetch of each arena, lazily
+                    ak = np.asarray(self.pool.arena_k)
+                    av = np.asarray(self.pool.arena_v)
+                host[i] = (ak[bid].copy(), av[bid].copy())
+                self.pool.decref(bid)
+        # blocks owned past the chain (padded-chunk / spec-slack writes
+        # beyond pos) carry no live tokens: plain release
+        for bid in self._owned.pop(slot):
+            if bid not in chain_ids:
+                self.pool.decref(bid)
+        self._live.discard(slot)
+        self._free.append(slot)
+        self.table[slot, :] = self.trash
+        self.pos[slot] = 0
+        if self.tracer.enabled:
+            self.tracer.instant("swap_out", track="paging", slot=slot,
+                                blocks=len(host), retained=len(retained))
+        return SwappedChain(pos=pos, retained=retained, host=host)
+
+    def swap_in(self, chain: SwappedChain, slot: Optional[int] = None
+                ) -> Tuple[int, int]:
+        """Restore a swapped chain into a (possibly different) free slot.
+
+        Retained entries re-bind by table assignment alone — their
+        reference transfers back from the record, zero dispatches.  Host
+        entries upload into freshly allocated blocks, one dispatch each
+        (``_load_block``).  Returns ``(slot, upload_dispatches)``; the
+        record is consumed and must not be reused.
+        """
+        slot = self.allocate(slot)
+        own = self._owned[slot]
+        uploads = 0
+        for i in sorted(set(chain.retained) | set(chain.host)):
+            if i in chain.retained:
+                bid = chain.retained[i]
+            else:
+                bid = self._alloc_block()
+                kb, vb = chain.host[i]
+                ak, av = _load_block(self.pool.arena_k, self.pool.arena_v,
+                                     jnp.asarray(kb), jnp.asarray(vb),
+                                     jnp.int32(bid))
+                self.pool.set_arena(ak, av)
+                uploads += 1
+            self.table[slot, i] = bid
+            own.append(bid)
+        self.pos[slot] = chain.pos
+        if self.tracer.enabled:
+            self.tracer.instant("swap_in", track="paging", slot=slot,
+                                uploads=uploads,
+                                retained=len(chain.retained))
+        return slot, uploads
+
+    def drop_swap(self, chain: SwappedChain) -> None:
+        """Abandon a swapped chain without restoring (request cancelled):
+        release the references it carried on retained blocks."""
+        for bid in chain.retained.values():
+            self.pool.decref(bid)
+        chain.retained = {}
+        chain.host = {}
 
     # -- debug / test readout -------------------------------------------
     def gather(self, slot: int, length: Optional[int] = None) -> Dict[str, np.ndarray]:

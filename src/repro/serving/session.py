@@ -22,6 +22,7 @@ the scheduler — and future async drivers — can interleave requests; plain
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -48,6 +49,14 @@ class ServeRequest:
     backend's compiled batch.  ``stream`` is called as ``stream(i, toks)``
     with ``toks`` the (B,) int32 tokens emitted at step ``i`` — in order,
     before the next step runs.  ``readback`` selects the App.-H regime.
+
+    ``priority`` orders admission under load (higher admits first; FIFO
+    within a priority) and, when the scheduler runs with
+    ``preemption != "off"``, lets a strictly-higher-priority arrival evict
+    a running lower-priority slot.  ``slo_ttft_ms`` is the request's
+    time-to-first-token service objective: attainment and goodput land in
+    ``SchedulerStats`` and the ``serving.slo.*`` metrics — it never
+    changes scheduling by itself (priority does).
     """
     prompt: np.ndarray
     max_new_tokens: int = 32
@@ -57,6 +66,8 @@ class ServeRequest:
     request_id: str = ""
     stream: Optional[Callable[[int, np.ndarray], None]] = None
     readback: str = "token"          # "token" | "logits"
+    priority: int = 0                # higher = more urgent (scheduler only)
+    slo_ttft_ms: Optional[float] = None   # TTFT objective for goodput
 
     def __post_init__(self) -> None:
         if not self.request_id:
@@ -123,6 +134,9 @@ class _Active:
     tokens: List[np.ndarray] = dataclasses.field(default_factory=list)
     stopped: Optional[np.ndarray] = None     # (B,) bool: row hit a stop token
     last_tok: Optional[np.ndarray] = None    # (B, 1) int32
+    resuming: bool = False    # recompute-preempted: next prefill completion
+                              # rebuilds KV only — its logits are NOT a new
+                              # first token (that token was already emitted)
 
     @property
     def done(self) -> bool:
@@ -314,6 +328,19 @@ class SchedulerStats:
     draft_tokens_accepted: int = 0   # drafts the target's argmax agreed with
     bonus_tokens: int = 0            # free token after each accepted span
     spec_tokens: int = 0             # tokens emitted by verify cycles
+    # SLO-aware preemption (Scheduler(preemption=...))
+    preemptions: int = 0             # slots evicted for higher priority
+    preempt_swaps: int = 0           # victims whose chains moved to host
+    preempt_recomputes: int = 0      # victims released for re-prefill
+    swap_ins: int = 0                # swapped chains restored to the arena
+    swap_blocks_host: int = 0        # exclusive blocks copied to host
+    swap_blocks_retained: int = 0    # shared blocks parked by reference
+    swap_upload_dispatches: int = 0  # host→device uploads on restore
+    # SLO attainment + goodput (requests carrying slo_ttft_ms)
+    slo_requests: int = 0            # completed requests that declared an SLO
+    slo_met: int = 0                 # of those, TTFT within the objective
+    goodput_tokens: int = 0          # tokens from SLO-meeting (or SLO-free)
+                                     # requests — the useful-work numerator
 
     @property
     def mean_occupancy(self) -> float:
@@ -380,6 +407,22 @@ class SchedulerStats:
             return 0.0
         return self.verify_dispatches / self.spec_tokens
 
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of SLO-carrying requests whose TTFT met the objective
+        (1.0 when no request declared one)."""
+        if not self.slo_requests:
+            return 1.0
+        return self.slo_met / self.slo_requests
+
+    @property
+    def goodput_tok_per_s(self) -> float:
+        """Useful throughput: tokens from requests that met their TTFT SLO
+        (SLO-free requests count in full) over the run's wall clock —
+        the harness's oversubscription headline next to raw
+        ``aggregate_tok_per_s``."""
+        return self.goodput_tokens / max(self.wall_s, 1e-12)
+
     def to_dict(self) -> Dict[str, Any]:
         """Every dataclass field plus the derived metrics — the lossless
         serialization ``from_dict`` round-trips (derived keys are
@@ -398,6 +441,8 @@ class SchedulerStats:
         d["tpot_p99_ms"] = self.tpot_p99_ms
         d["queue_wait_p50_ms"] = self.queue_wait_p50_ms
         d["queue_wait_p99_ms"] = self.queue_wait_p99_ms
+        d["slo_attainment"] = self.slo_attainment
+        d["goodput_tok_per_s"] = self.goodput_tok_per_s
         return d
 
     @classmethod
@@ -447,6 +492,16 @@ class SchedulerStats:
             "bonus_tokens": self.bonus_tokens,
             "dispatches_per_accepted_token": round(
                 self.dispatches_per_accepted_token, 3),
+            "preemptions": self.preemptions,
+            "preempt_swaps": self.preempt_swaps,
+            "preempt_recomputes": self.preempt_recomputes,
+            "swap_ins": self.swap_ins,
+            "swap_blocks_host": self.swap_blocks_host,
+            "swap_blocks_retained": self.swap_blocks_retained,
+            "slo_requests": self.slo_requests,
+            "slo_met": self.slo_met,
+            "slo_attainment": round(self.slo_attainment, 3),
+            "goodput_tok_s": round(self.goodput_tok_per_s, 2),
         }
 
 
@@ -497,6 +552,27 @@ class Scheduler:
     ``next_token`` before that cycle's tokens are fetched, so the host
     readback + Python bookkeeping overlap device work (the savings land in
     ``SchedulerStats.overlap_*``).  Token streams are identical either way.
+
+    ``preemption`` (paged layout only) makes the scheduler survive
+    oversubscription: admission is priority-ordered (FIFO within a
+    priority), and when every slot is busy a strictly-higher-priority
+    waiter evicts the lowest-priority decoding slot.  A victim is either
+    **swapped** — its block chain moves to host memory through
+    ``swap_out_paged`` (shared radix/COW blocks park by reference, only
+    exclusive blocks cross the bus; the ``dist/elastic.py`` restore
+    idiom) and later re-uploads byte-exactly — or **recomputed**:
+    released through the radix cache (so its prompt+generated chain
+    stays warm) and re-prefilled when a slot frees.  ``"auto"`` picks
+    per victim from measured costs: EWMA host-side prefill s/token vs
+    EWMA swap-in s/block, applied to the victim's exclusive-block count
+    versus the tokens a re-prefill would actually recompute after the
+    radix hit.  Either way the emitted token stream is byte-identical to
+    an unpreempted run.
+
+    ``submit_at`` gives open-loop (arrival-clock) traffic: requests
+    enter the queue at scheduled wall-clock times regardless of
+    completions, so ``run`` reproduces real bursty load —
+    ``benchmarks/bench_traffic.py`` drives this path.
     """
 
     def __init__(self, session: InferenceSession, num_slots: int = 2, *,
@@ -506,8 +582,47 @@ class Scheduler:
                  num_blocks: Optional[int] = None,
                  async_readback: bool = True,
                  speculative=None,
+                 preemption: str = "off",
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None) -> None:
+        """Args:
+          session: the :class:`InferenceSession` whose backend executes
+            every dispatch; the scheduler only orchestrates.
+          num_slots: concurrent request slots — the batch width decode
+            cycles amortize dispatch overhead over.
+          continuous: ``True`` batches every cycle into ONE
+            ``decode_batch`` dispatch; ``False`` is the sequential
+            per-slot-dispatch baseline the amortization curve starts at.
+          kv_layout: ``"dense"`` (slot-major KV pool) or ``"paged"``
+            (block pool + radix prefix cache, see
+            :mod:`repro.serving.paging`).
+          prefill_chunk: paged only — prompt tokens prefilled per cycle,
+            interleaved with decode so long admissions never stall
+            running slots; ``None`` prefills whole prompts at once.
+          prefix_cache: paged only — radix-cache prompt prefixes so
+            shared spans skip prefill (see ``SchedulerStats.prefix_*``).
+          block_size: paged only — tokens per KV block (sharing/COW
+            granularity).
+          num_blocks: paged only — arena capacity in blocks; ``None``
+            sizes for worst-case occupancy plus prefix-cache slack.
+          async_readback: double-buffer device→host token readback in
+            steady state (identical token streams; savings in
+            ``SchedulerStats.overlap_*``).
+          speculative: draft/verify decoding — ``"ngram"``, a
+            :class:`~repro.serving.spec.SpeculativeConfig`, or a
+            :class:`~repro.serving.spec.Drafter`; paged layout only.
+          preemption: ``"off"`` | ``"swap"`` | ``"recompute"`` |
+            ``"auto"`` — oversubscription policy (paged layout only; see
+            the class docstring).  ``"swap"`` needs
+            ``capabilities.preemption``; ``"auto"`` degrades to
+            recompute when the backend cannot swap.
+          tracer: a :class:`repro.obs.Tracer` — scheduler/slot/paging
+            tracks plus the backend's dispatch lane feed one timeline.
+          metrics: a :class:`repro.obs.MetricsRegistry` — each ``run``
+            folds its stats in (``serving.*`` counters/histograms,
+            per-priority TTFT, SLO attainment); the traffic harness
+            sources its SLO numbers HERE, not from ad-hoc timers.
+        """
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if kv_layout not in ("dense", "paged"):
@@ -516,6 +631,12 @@ class Scheduler:
             raise ValueError("paged KV requires the continuous scheduler")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if preemption not in ("off", "swap", "recompute", "auto"):
+            raise ValueError(f"unknown preemption {preemption!r}")
+        if preemption != "off" and kv_layout != "paged":
+            raise ValueError(
+                "preemption requires kv_layout='paged' (victim state moves "
+                "as block chains; the dense pool has nothing to swap)")
         if speculative is not None:
             if kv_layout != "paged":
                 raise ValueError(
@@ -538,8 +659,18 @@ class Scheduler:
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.async_readback = async_readback
+        self.preemption = preemption
         self._queue: List[ServeRequest] = []
+        self._future: List[Tuple[float, int, ServeRequest]] = []  # heap
+        self._preempted: List[Dict[str, Any]] = []   # evicted, awaiting slot
         self._submit_t: Dict[str, float] = {}
+        self._req_meta: Dict[str, Tuple[int, Optional[float]]] = {}
+        self._finished_meta: List[Tuple[int, Optional[float], ServeResult]] \
+            = []
+        # measured-cost EWMAs driving the "auto" restore-vs-recompute pick
+        # (host-side enqueue costs — the side the scheduler actually pays)
+        self._ewma_prefill_s_per_tok: Optional[float] = None
+        self._ewma_upload_s_per_block: Optional[float] = None
         self._bstate: Optional[Dict[str, Any]] = None
         self.last_stats: Optional[SchedulerStats] = None
         self.tracer = tracer if tracer is not None else NULL_TRACER
@@ -552,11 +683,44 @@ class Scheduler:
     def submit(self, req: ServeRequest) -> str:
         self._queue.append(req)
         self._submit_t[req.request_id] = time.perf_counter()
+        self._req_meta[req.request_id] = (req.priority, req.slo_ttft_ms)
         return req.request_id
+
+    def submit_at(self, req: ServeRequest, at_s: float) -> str:
+        """Open-loop submission: the request enters the queue at the
+        absolute ``time.perf_counter()`` instant ``at_s`` (past instants
+        enter immediately).  ``run`` keeps draining until every scheduled
+        arrival has landed and completed, sleeping through genuinely idle
+        gaps — so an arrival-process trace (Poisson, replay) plays back on
+        the wall clock regardless of how fast completions drain.
+        ``queue_wait_s`` measures from the SCHEDULED arrival, which is
+        what an open-loop latency percentile must charge."""
+        heapq.heappush(self._future, (at_s, next(_req_counter), req))
+        self._submit_t[req.request_id] = at_s
+        self._req_meta[req.request_id] = (req.priority, req.slo_ttft_ms)
+        return req.request_id
+
+    def _drain_arrivals(self) -> None:
+        """Move every due scheduled arrival into the live queue."""
+        now = time.perf_counter()
+        while self._future and self._future[0][0] <= now:
+            self._queue.append(heapq.heappop(self._future)[2])
+
+    def _wait_for_arrival(self, busy: bool) -> None:
+        """Idle-sleep until the next scheduled arrival — only when there
+        is genuinely nothing to run (open-loop gaps in light traffic)."""
+        if not busy and not self._queue and self._future:
+            time.sleep(max(0.0, self._future[0][0] - time.perf_counter()))
+
+    def _pop_next(self) -> ServeRequest:
+        """Highest priority first, FIFO within a priority."""
+        i = min(range(len(self._queue)),
+                key=lambda j: (-self._queue[j].priority, j))
+        return self._queue.pop(i)
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return len(self._queue) + len(self._future)
 
     # ------------------------------------------------------------------
     def _book_admission(self, a: _Active, st: SchedulerStats) -> None:
@@ -590,10 +754,19 @@ class Scheduler:
         st.wall_s = time.perf_counter() - t0
         st.dispatches = backend.dispatch_stats().dispatches - d0
         st.completed = len(results)
-        for r in results.values():
+        self._finished_meta = []
+        for rid, r in results.items():
             st.ttfts_s.append(r.ttft_s)
             if r.n_new > 1:
                 st.tpots_s.append((r.total_s - r.ttft_s) / (r.n_new - 1))
+            pri, slo = self._req_meta.pop(rid, (0, None))
+            self._finished_meta.append((pri, slo, r))
+            met = slo is None or 1e3 * r.ttft_s <= slo
+            if slo is not None:
+                st.slo_requests += 1
+                st.slo_met += int(met)
+            if met:
+                st.goodput_tokens += r.n_new
         if self.metrics is not None:
             self._publish_metrics(st)
         self.last_stats = st
@@ -614,6 +787,17 @@ class Scheduler:
             m.histogram("serving.tpot_s").observe(v)
         for v in st.queue_waits_s:
             m.histogram("serving.queue_wait_s").observe(v)
+        # SLO attainment + goodput + per-priority latency: the traffic
+        # harness reads THESE (not ad-hoc timers) for its reported numbers
+        m.counter("serving.preemptions").inc(st.preemptions)
+        m.counter("serving.preempt_swaps").inc(st.preempt_swaps)
+        m.counter("serving.preempt_recomputes").inc(st.preempt_recomputes)
+        m.counter("serving.swap_ins").inc(st.swap_ins)
+        m.counter("serving.slo.requests").inc(st.slo_requests)
+        m.counter("serving.slo.met").inc(st.slo_met)
+        m.counter("serving.goodput_tokens").inc(st.goodput_tokens)
+        for pri, _slo, r in self._finished_meta:
+            m.histogram(f"serving.ttft_s.p{pri}").observe(r.ttft_s)
 
     # -- shared cycle plumbing ------------------------------------------
     @staticmethod
@@ -712,6 +896,7 @@ class Scheduler:
         work is ever discarded."""
         backend = self.session.backend
         while (self.async_readback and out.next_token is not None
+               and not self._future       # open-loop arrivals poll per cycle
                and self._async_safe(active)
                and all(len(active[s].tokens) + 1
                        < active[s].req.max_new_tokens for s in slots)):
@@ -738,11 +923,13 @@ class Scheduler:
         bstate = self._bstate
         results: Dict[str, ServeResult] = {}
         active: Dict[int, _Active] = {}
-        while self._queue or active:
+        while self._queue or self._future or active:
+            self._drain_arrivals()
+            self._wait_for_arrival(busy=bool(active))
             # in-flight admission: prefill queued requests into free slots
             # between decode cycles — running slots never drain or stall
             while self._queue and len(active) < self.num_slots:
-                req = self._queue.pop(0)
+                req = self._pop_next()
                 self._check_row(req)
                 with self.tracer.span("admit", track="scheduler",
                                       req=req.request_id):
@@ -886,6 +1073,134 @@ class Scheduler:
                 del active[s]
         return bstate
 
+    # -- SLO-aware preemption (oversubscription survival) ----------------
+    @staticmethod
+    def _ewma(prev: Optional[float], x: float, alpha: float = 0.25) -> float:
+        return x if prev is None else (1.0 - alpha) * prev + alpha * x
+
+    def _preempt_kind(self, bstate, slot: int, a: _Active) -> str:
+        """Restore-vs-recompute for THIS victim, from measured costs.
+
+        Restore pays one host→device upload per **exclusive** block (the
+        shared ones park by reference, both ways free).  Recompute pays a
+        re-prefill of ``realized[:-1]`` — but the preempt-release inserts
+        the victim's chain into the radix cache, so only the partial tail
+        block past the last full-block boundary actually recomputes (if
+        the chain survives eviction; the estimate is optimistic, which is
+        the right bias — a wrong "recompute" pick still yields identical
+        tokens, just slower).  Until both EWMAs have a sample, swap wins:
+        it is the choice that produces the missing measurement.
+        """
+        can_swap = self.session.backend.capabilities.preemption
+        if self.preemption == "swap":
+            if not can_swap:
+                raise ValueError(
+                    f"backend {self.session.backend.capabilities.name!r} "
+                    "cannot swap block chains (capabilities.preemption is "
+                    "False); use preemption='recompute' or 'auto'")
+            return "swap"
+        if self.preemption == "recompute" or not can_swap:
+            return "recompute"
+        up, pf = self._ewma_upload_s_per_block, self._ewma_prefill_s_per_tok
+        if up is None or pf is None:
+            return "swap"
+        pg = bstate["paged"]
+        pos = int(pg.pos[slot])                  # KV covers [0, pos)
+        exclusive = sum(1 for b in pg.chain(slot, pos)
+                        if pg.pool.refcount[b] == 1)
+        tail = pos - (pos // pg.block_size) * pg.block_size
+        return "recompute" if max(tail, 1) * pf < exclusive * up else "swap"
+
+    def _maybe_preempt(self, bstate, active: Dict[int, _Active],
+                       prefilling: Dict[int, _Active], st: SchedulerStats):
+        """Evict lowest-priority decoding slots while a strictly-higher-
+        priority request waits and no slot is free.  Strictness is the
+        anti-thrash rule: a preempted request can never re-preempt its own
+        priority class, so no pair of requests can trade a slot forever.
+        Mid-prefill slots are never victims — their KV is cheapest to
+        finish, not to throw away."""
+        backend = self.session.backend
+        while active and len(active) + len(prefilling) >= self.num_slots:
+            waiting = [r.priority for r in self._queue] \
+                + [rec["a"].req.priority for rec in self._preempted]
+            if not waiting:
+                return bstate
+            head = max(waiting)
+            # victim: lowest priority; ties evict the youngest (most
+            # recently started) so near-complete work survives
+            vslot = min(active, key=lambda s: (active[s].req.priority,
+                                               -active[s].t0))
+            a = active[vslot]
+            if a.req.priority >= head:
+                return bstate
+            kind = self._preempt_kind(bstate, vslot, a)
+            with self.tracer.span("preempt", track="scheduler",
+                                  slot=vslot, req=a.req.request_id,
+                                  kind=kind, priority=a.req.priority,
+                                  for_priority=head):
+                if kind == "swap":
+                    rec = {"kind": "swap", "a": a,
+                           "swap": backend.swap_out_paged(bstate, vslot)}
+                    st.preempt_swaps += 1
+                    st.swap_blocks_host += len(rec["swap"]["chain"].host)
+                    st.swap_blocks_retained += len(
+                        rec["swap"]["chain"].retained)
+                else:
+                    # release THROUGH the radix cache: the chain stays
+                    # warm, so the eventual re-prefill is mostly a hit
+                    bstate = backend.release_slot(
+                        bstate, vslot, tokens=self._realized(a))
+                    rec = {"kind": "recompute", "a": a}
+                    st.preempt_recomputes += 1
+            if self._drafter is not None:
+                self._drafter.release(vslot)
+            st.preemptions += 1
+            del active[vslot]
+            self._preempted.append(rec)
+        return bstate
+
+    def _resume_one(self, bstate, slot: int, active: Dict[int, _Active],
+                    prefilling: Dict[int, _Active], st: SchedulerStats):
+        """Give the best waiting preempted request the freed ``slot``.
+
+        Swap records restore byte-exactly (shared blocks re-bind, host
+        blocks upload — timed into the upload EWMA) and go straight back
+        to decoding.  Recompute records re-admit ``realized[:-1]`` as a
+        fresh chunked prefill whose completed logits are DISCARDED
+        (``resuming``): the token they would re-produce was already
+        emitted before the preemption, and ``last_tok`` still holds the
+        pending input, so decode resumes on the exact KV-position
+        invariant (KV covers [0, len(realized)-1)).
+        """
+        backend = self.session.backend
+        i = min(range(len(self._preempted)),
+                key=lambda j: (-self._preempted[j]["a"].req.priority, j))
+        rec = self._preempted.pop(i)
+        a = rec["a"]
+        with self.tracer.span("resume", track="scheduler", slot=slot,
+                              req=a.req.request_id, kind=rec["kind"]):
+            if rec["kind"] == "swap":
+                uploads = len(rec["swap"]["chain"].host)
+                t0 = time.perf_counter()
+                backend.swap_in_paged(bstate, rec["swap"], slot)
+                if uploads:
+                    self._ewma_upload_s_per_block = self._ewma(
+                        self._ewma_upload_s_per_block,
+                        (time.perf_counter() - t0) / uploads)
+                st.swap_ins += 1
+                st.swap_upload_dispatches += uploads
+                active[slot] = a
+            else:
+                realized = self._realized(a)
+                info = backend.admit_paged(bstate, slot, realized[:-1])
+                if info.cached:
+                    st.prefix_hits += 1
+                    st.prefix_hit_tokens += info.cached
+                st.prompt_tokens += info.total
+                a.resuming = True
+                prefilling[slot] = a
+        return bstate
+
     # -- paged KV + radix prefix cache + chunked prefill -----------------
     def _run_paged(self, st: SchedulerStats) -> Dict[str, ServeResult]:
         backend = self.session.backend
@@ -915,15 +1230,31 @@ class Scheduler:
         results: Dict[str, ServeResult] = {}
         active: Dict[int, _Active] = {}
         prefilling: Dict[int, _Active] = {}
-        while self._queue or active or prefilling:
-            # admission: radix match + block-table setup only (no compute)
-            while self._queue and len(active) + len(prefilling) < self.num_slots:
-                req = self._queue.pop(0)
+        while (self._queue or self._future or self._preempted
+               or active or prefilling):
+            self._drain_arrivals()
+            self._wait_for_arrival(
+                busy=bool(active or prefilling or self._preempted))
+            if self.preemption != "off":
+                bstate = self._maybe_preempt(bstate, active, prefilling, st)
+            # admission: radix match + block-table setup only (no compute);
+            # preempted requests compete with fresh arrivals by priority
+            # (resume wins ties — they already waited once)
+            while ((self._queue or self._preempted)
+                   and len(active) + len(prefilling) < self.num_slots):
+                slot = min(s for s in range(self.num_slots)
+                           if s not in active and s not in prefilling)
+                qpri = max((r.priority for r in self._queue), default=None)
+                ppri = max((rec["a"].req.priority
+                            for rec in self._preempted), default=None)
+                if ppri is not None and (qpri is None or ppri >= qpri):
+                    bstate = self._resume_one(bstate, slot, active,
+                                              prefilling, st)
+                    continue
+                req = self._pop_next()
                 prompt = self._check_row(req)
                 a = self.session.begin(req)
                 self._book_admission(a, st)
-                slot = min(s for s in range(self.num_slots)
-                           if s not in active and s not in prefilling)
                 with self.tracer.span("admit", track="scheduler",
                                       req=req.request_id, slot=slot):
                     info = backend.admit_paged(bstate, slot, prompt)
@@ -936,12 +1267,27 @@ class Scheduler:
             # decode cycle below — a long prompt admits over many cycles
             # without ever stalling the slots already decoding
             for slot in sorted(prefilling):
+                meta = bstate["meta"][slot]
+                cur0 = meta["cursor"]
+                tc = time.perf_counter()
                 with self.tracer.span("prefill_chunk", track=f"slot{slot}"):
                     out = backend.prefill_paged_chunk(bstate, slot)
+                dt = time.perf_counter() - tc
+                if meta["cursor"] > cur0:   # feeds the "auto" preempt pick
+                    self._ewma_prefill_s_per_tok = self._ewma(
+                        self._ewma_prefill_s_per_tok,
+                        dt / (meta["cursor"] - cur0))
                 st.prefill_chunks += 1
                 if out is None:
                     continue
                 a = prefilling.pop(slot)
+                if a.resuming:
+                    # recompute-resume: KV is rebuilt, but this "first
+                    # token" was emitted before the preemption — discard
+                    # the logits, go straight back to decoding last_tok
+                    a.resuming = False
+                    active[slot] = a
+                    continue
                 self.session.first(a, out)
                 st.tokens += 1
                 if a.done:
@@ -961,10 +1307,14 @@ class Scheduler:
                 continue
             bstate, slots, out = self._issue_cycle(
                 bstate, active, st, self._host_tokens(active))
-            # stay synchronous while prompts are mid-prefill so their next
-            # chunk is never delayed behind a deferred readback
-            if prefilling or (self._queue
-                              and len(active) < self.num_slots):
+            # stay synchronous while prompts are mid-prefill (their next
+            # chunk must not wait behind a deferred readback), while
+            # scheduled arrivals or preempted requests are outstanding
+            # (the drain loop would defer their admission/preemption
+            # checks), or while a waiter could preempt a running slot
+            if (prefilling or self._future or self._preempted
+                    or (self._queue and (len(active) < self.num_slots
+                                         or self.preemption != "off"))):
                 bstate = self._retire_cycle(out, slots, active, results,
                                             bstate, st, overlapped=False)
             else:
@@ -979,11 +1329,13 @@ class Scheduler:
     def _run_sequential(self, st: SchedulerStats) -> Dict[str, ServeResult]:
         results: Dict[str, ServeResult] = {}
         active: Dict[int, _Active] = {}
-        while self._queue or active:
+        while self._queue or self._future or active:
+            self._drain_arrivals()
+            self._wait_for_arrival(busy=bool(active))
             while self._queue and len(active) < self.num_slots:
                 slot = next(i for i in range(self.num_slots)
                             if i not in active)
-                a = self._start(self._queue.pop(0), st)
+                a = self._start(self._pop_next(), st)
                 if a.done:
                     results[a.req.request_id] = self.session.finish(a)
                 else:

@@ -1,0 +1,165 @@
+"""Open-loop traffic synthesis for the serving scheduler.
+
+Closed-loop benchmarks (submit N, drain, repeat) can never oversubscribe:
+the queue refills only as fast as the server completes.  Production load
+is **open-loop** — requests arrive on a wall clock that does not care how
+busy the server is — and that is the regime where the paper's dispatch
+overhead turns into user-visible latency: every µs of per-op overhead
+stretches the decode cycles every queued request is waiting behind.
+
+This module generates that load deterministically:
+
+* :class:`PoissonArrivals` — exponential inter-arrival gaps at a target
+  rate (the memoryless process bursty API traffic is usually modeled as),
+  from a seeded generator so a run is exactly reproducible.
+* :class:`ReplayArrivals` — a recorded timestamp trace, for replaying a
+  production arrival pattern (or an adversarial hand-built burst).
+* :func:`synthesize_workload` — arrival times + request bodies: mixed
+  prompt/output lengths, multi-tenant shared prefixes (each tenant's
+  requests open with the same system-prompt tokens, so the radix cache
+  has something real to hit), priority classes, and a TTFT SLO stamp.
+
+Feed the result to :meth:`Scheduler.submit_at
+<repro.serving.session.Scheduler.submit_at>` and ``run()`` plays the
+trace back on the wall clock — ``benchmarks/bench_traffic.py`` is the
+harness that does exactly that and reads the SLO numbers back out of
+``repro.obs.metrics``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.sampler import SamplerConfig
+from repro.serving.session import ServeRequest
+
+
+class PoissonArrivals:
+    """Poisson arrival process: exponential gaps at ``rate_rps``.
+
+    ``times(n)`` returns n strictly increasing offsets (seconds from the
+    trace start).  Deterministic in ``seed`` — two harness runs with the
+    same seed replay the identical burst structure, so latency deltas
+    between configurations are attributable to the scheduler, not the
+    dice.
+    """
+
+    def __init__(self, rate_rps: float, seed: int = 0) -> None:
+        if rate_rps <= 0:
+            raise ValueError("rate_rps must be > 0")
+        self.rate_rps = rate_rps
+        self.seed = seed
+
+    def times(self, n: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return np.cumsum(rng.exponential(1.0 / self.rate_rps, size=n))
+
+
+class ReplayArrivals:
+    """Replay a recorded arrival trace (offsets in seconds from start).
+
+    ``scale`` stretches/compresses the clock — ``scale=0.5`` replays the
+    trace at twice the recorded rate, the standard way one trace sweeps
+    an oversubscription axis.  ``times(n)`` requires the trace to cover
+    n arrivals; replay never invents load that was not recorded.
+    """
+
+    def __init__(self, times_s: Sequence[float], scale: float = 1.0) -> None:
+        t = np.asarray(times_s, np.float64)
+        if t.ndim != 1 or t.size == 0:
+            raise ValueError("times_s must be a non-empty 1-D sequence")
+        if np.any(np.diff(t) < 0):
+            raise ValueError("times_s must be non-decreasing")
+        if scale <= 0:
+            raise ValueError("scale must be > 0")
+        self._times = t * scale
+
+    def times(self, n: int) -> np.ndarray:
+        if n > self._times.size:
+            raise ValueError(
+                f"trace holds {self._times.size} arrivals, {n} requested")
+        return self._times[:n].copy()
+
+
+@dataclasses.dataclass
+class TrafficRequest:
+    """One synthesized arrival: when it lands, what it asks for."""
+    at_s: float                  # offset from trace start
+    request: ServeRequest
+    tenant: int
+
+
+def synthesize_workload(
+        n: int, arrivals, *, vocab_size: int,
+        prompt_lens: Tuple[int, int] = (12, 48),
+        output_lens: Tuple[int, int] = (8, 32),
+        num_tenants: int = 4,
+        shared_prefix_len: int = 16,
+        priorities: Sequence[Tuple[int, float]] = ((0, 1.0),),
+        slo_ttft_ms: Optional[float] = None,
+        seed: int = 0) -> List[TrafficRequest]:
+    """Deterministic mixed workload over an arrival process.
+
+    Args:
+      n: number of requests.
+      arrivals: a :class:`PoissonArrivals` / :class:`ReplayArrivals` (any
+        object with ``times(n) -> offsets``).
+      vocab_size: token id range for the synthetic prompts.
+      prompt_lens: inclusive [lo, hi] uniform range for prompt length
+        (the shared prefix counts toward it, so every prompt is at least
+        ``shared_prefix_len + 1`` long).
+      output_lens: inclusive [lo, hi] uniform range for max_new_tokens.
+      num_tenants: distinct shared-prefix pools; each request opens with
+        its tenant's system-prompt tokens — the multi-tenant radix-reuse
+        pattern (WebLLM-style conversational serving).
+      priorities: (priority, weight) classes sampled per request; higher
+        priority admits first and may preempt under
+        ``Scheduler(preemption=...)``.
+      slo_ttft_ms: TTFT objective stamped on every request (drives the
+        goodput/attainment accounting in ``SchedulerStats`` and the
+        ``serving.slo.*`` metrics).
+      seed: one seed fixes tenants, lengths, bodies, and priorities;
+        the arrival process carries its own seed.
+
+    Greedy sampling throughout — the harness asserts byte-exact parity
+    across scheduler configurations, which only greedy guarantees.
+    """
+    if n < 1:
+        raise ValueError("n must be >= 1")
+    lo_p, hi_p = prompt_lens
+    if lo_p <= shared_prefix_len:
+        lo_p = shared_prefix_len + 1       # never a prefix-only prompt
+        hi_p = max(hi_p, lo_p)
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab_size, size=shared_prefix_len)
+                .astype(np.int32) for _ in range(num_tenants)]
+    pris = np.asarray([p for p, _ in priorities], np.int64)
+    weights = np.asarray([w for _, w in priorities], np.float64)
+    weights = weights / weights.sum()
+    offsets = np.asarray(arrivals.times(n), np.float64)
+    out: List[TrafficRequest] = []
+    for i in range(n):
+        tenant = int(rng.integers(0, num_tenants))
+        plen = int(rng.integers(lo_p, hi_p + 1))
+        body = rng.integers(0, vocab_size,
+                            size=plen - shared_prefix_len).astype(np.int32)
+        prompt = np.concatenate([prefixes[tenant], body]).reshape(1, -1)
+        out.append(TrafficRequest(
+            at_s=float(offsets[i]),
+            tenant=tenant,
+            request=ServeRequest(
+                prompt=prompt,
+                max_new_tokens=int(rng.integers(output_lens[0],
+                                                output_lens[1] + 1)),
+                sampler=SamplerConfig(),          # greedy: parity-checkable
+                priority=int(pris[rng.choice(len(pris), p=weights)]),
+                slo_ttft_ms=slo_ttft_ms,
+                request_id=f"traffic-{seed}-{i}",
+            )))
+    return out
+
+
+__all__ = ["PoissonArrivals", "ReplayArrivals", "TrafficRequest",
+           "synthesize_workload"]
