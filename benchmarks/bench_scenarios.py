@@ -1,0 +1,186 @@
+"""Heterogeneous-family serving matrix: transformer vs Mamba2 vs RG-LRU
+behind the one scheduler (BENCH_scenarios.json).
+
+The paper's finding — per-operation overhead dominates batch-1 decode —
+applies at least as strongly to recurrent families, whose O(1) state
+makes each decode step cheaper and dispatch cost a LARGER fraction of
+it.  The state-cache protocol (`repro.serving.statecache`) serves all
+three families through the same continuous-batching scheduler; this
+bench reports the per-family matrix:
+
+* ``tok_s``            — aggregate scheduled decode throughput
+* ``disp_per_tok``     — dispatches per generated token (the overhead
+                         currency; recurrent must never pay MORE than
+                         transformer through the same scheduler)
+* ``state bytes/slot`` — probed at two ``max_len`` values.  Transformer
+                         KV grows linearly; the recurrent caches are
+                         sequence-length-independent — the "different,
+                         cheaper cache class" claim, measured.
+* ``parity_exact``     — scheduled greedy == the family's own raw
+                         prefill+decode loop, byte for byte.
+
+``--gate`` (the CI step) asserts parity for every family, recurrent
+``disp_per_tok`` ≤ transformer's, and recurrent state bytes/slot
+constant in sequence length.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, save_results
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serving import (InferenceSession, Scheduler, ServeRequest,
+                           create_backend)
+
+NUM_SLOTS = 4
+PROBE_LENS = (64, 256)        # max_len values the memory probe compares
+
+FAMILIES = (
+    ("transformer", "qwen2-1.5b", {"layers": 3}),
+    ("mamba2", "mamba2-1.3b", {}),
+    ("rglru", "recurrentgemma-9b", {"layers": 3}),
+)
+
+
+def _raw_greedy(model, params, prompt, n_new, max_len):
+    """The family's own prefill + decode loop — the parity oracle."""
+    cache, logits = model.prefill(params, {"tokens": jnp.asarray(prompt)},
+                                  max_len)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(n_new - 1):
+        cache, logits = model.decode_step(
+            params, cache, jnp.asarray([[toks[-1]]], jnp.int32))
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return np.asarray(toks, np.int32)
+
+
+def _state_bytes_per_slot(model, max_len: int) -> int:
+    """Per-slot footprint of the slot pool a fresh backend would carry.
+
+    Params are irrelevant to pool allocation, so an empty dict keeps the
+    probe cheap: nothing is jitted, only the state arrays materialize.
+    """
+    backend = create_backend("model", model, {}, batch=1, max_len=max_len)
+    bstate = backend.alloc_slots(NUM_SLOTS)
+    pool = bstate.get("rstate") or bstate.get("kv")
+    return pool.bytes_allocated // NUM_SLOTS
+
+
+def _bench_family(name: str, arch: str, kw: Dict, *, n_req: int,
+                  n_new: int, max_len: int) -> Dict:
+    cfg = get_smoke_config(arch, **kw)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    backend = create_backend("model", model, params, batch=1, max_len=max_len)
+    caps = backend.capabilities
+    rng = np.random.default_rng(11)
+    lens = (4, 6, 5, 3, 7, 4, 5, 6)
+    prompts = [rng.integers(1, cfg.vocab_size, size=(1, lens[i % len(lens)]))
+               .astype(np.int32) for i in range(n_req)]
+    refs = [_raw_greedy(model, params, p, n_new, max_len) for p in prompts]
+
+    def _run():
+        sched = Scheduler(InferenceSession(backend), num_slots=NUM_SLOTS,
+                          continuous=True)
+        ids = [sched.submit(ServeRequest(prompt=p, max_new_tokens=n_new,
+                                         request_id=f"{name}{i}"))
+               for i, p in enumerate(prompts)]
+        return sched.run(), sched.last_stats, ids
+
+    _run()                                  # warmup: compile, fill caches
+    d0 = backend.dispatch_stats().dispatches
+    results, st, ids = _run()               # timed, steady-state pass
+    disp = backend.dispatch_stats().dispatches - d0
+    parity = all(
+        np.array_equal(np.asarray(results[rid].tokens).ravel(), ref)
+        for rid, ref in zip(ids, refs))
+
+    # state bytes/slot at two max_len values: the memory-scaling probe
+    bytes_at = {str(m): _state_bytes_per_slot(model, m) for m in PROBE_LENS}
+    probe = [bytes_at[str(m)] for m in PROBE_LENS]
+    return {
+        "family": name,
+        "arch": arch,
+        "state_kind": caps.state_kind,
+        "tok_s": round(st.aggregate_tok_per_s, 2),
+        "disp_per_tok": round(disp / max(st.tokens, 1), 4),
+        "parity_exact": parity,
+        "cycles": st.cycles,
+        "mean_occupancy": round(st.mean_occupancy, 2),
+        "state_bytes_per_slot": bytes_at,
+        "state_bytes_constant": probe[0] == probe[1],
+        "kv_bytes_live_peak": st.kv_bytes_live_peak,
+    }
+
+
+def run_scenarios(quick: bool = False, gate: bool = False) -> Dict:
+    n_req = 6 if quick else 8
+    n_new = 6 if quick else 12
+    max_len = PROBE_LENS[0]
+
+    rows: List[Dict] = []
+    for name, arch, kw in FAMILIES:
+        print(f"  [{name}] {arch} …")
+        rows.append(_bench_family(name, arch, kw, n_req=n_req,
+                                  n_new=n_new, max_len=max_len))
+    by = {r["family"]: r for r in rows}
+
+    table = [dict(r, state_bytes_64=r["state_bytes_per_slot"]["64"],
+                  state_bytes_256=r["state_bytes_per_slot"]["256"])
+             for r in rows]
+    print_table(
+        f"Heterogeneous-family serving ({NUM_SLOTS} slots, {n_req} requests "
+        f"× {n_new} tokens, scheduled-vs-raw parity asserted)",
+        table, ["family", "state_kind", "tok_s", "disp_per_tok",
+                "parity_exact", "mean_occupancy", "state_bytes_64",
+                "state_bytes_256", "state_bytes_constant"])
+
+    ok_parity = all(r["parity_exact"] for r in rows)
+    ok_disp = all(by[f]["disp_per_tok"] <= by["transformer"]["disp_per_tok"]
+                  for f in ("mamba2", "rglru"))
+    ok_const = all(by[f]["state_bytes_constant"] for f in ("mamba2", "rglru"))
+    ok_kv_grows = not by["transformer"]["state_bytes_constant"]
+    payload = {
+        "quick": quick,
+        "backend": "model",
+        "num_slots": NUM_SLOTS,
+        "requests": n_req,
+        "new_tokens": n_new,
+        "probe_max_lens": list(PROBE_LENS),
+        "families": rows,
+        "parity": "exact" if ok_parity else "BROKEN",
+        "gate_parity_exact": ok_parity,
+        "gate_recurrent_disp_le_transformer": ok_disp,
+        "gate_recurrent_bytes_constant": ok_const,
+        "gate_transformer_bytes_grow": ok_kv_grows,
+    }
+    save_results("scenarios", payload)
+    if gate:
+        ok = ok_parity and ok_disp and ok_const and ok_kv_grows
+        print(f"  → scenarios gate: parity "
+              f"{'exact' if ok_parity else 'BROKEN'}; disp/tok "
+              f"mamba2 {by['mamba2']['disp_per_tok']} / rglru "
+              f"{by['rglru']['disp_per_tok']} vs transformer "
+              f"{by['transformer']['disp_per_tok']}; recurrent bytes/slot "
+              f"{'constant' if ok_const else 'GROWING'} — "
+              f"{'PASS' if ok else 'FAIL'}")
+        if not ok:
+            raise SystemExit(
+                "scenarios gate failed: "
+                f"parity={ok_parity} disp={ok_disp} const={ok_const} "
+                f"kv_grows={ok_kv_grows}")
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--gate", action="store_true")
+    args = ap.parse_args()
+    run_scenarios(quick=args.quick, gate=args.gate)

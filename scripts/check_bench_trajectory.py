@@ -3,8 +3,8 @@
 
 The repo commits its benchmark payloads (``BENCH_serving.json``,
 ``BENCH_paging.json``, ``BENCH_paging_graph.json``, ``BENCH_spec.json``,
-``BENCH_obs.json``, ``BENCH_traffic.json``) as the performance
-trajectory.  CI regenerates them fresh every run; this script diffs the
+``BENCH_obs.json``, ``BENCH_traffic.json``, ``BENCH_scenarios.json``)
+as the performance trajectory.  CI regenerates them fresh every run; this script diffs the
 fresh copies against the committed baselines (``git show <ref>:<file>``)
 and FAILS on a >15% regression in the throughput trajectory.
 
@@ -129,6 +129,28 @@ def _traffic_metrics(data: Dict) -> Dict[str, Metric]:
     return out
 
 
+def _scenarios_metrics(data: Dict) -> Dict[str, Metric]:
+    out: Dict[str, Metric] = {}
+    # deterministic: parity, dispatch counts, and state-footprint scaling
+    # are structural facts of the scheduler + cache class, never noise
+    for key in ("gate_parity_exact", "gate_recurrent_disp_le_transformer",
+                "gate_recurrent_bytes_constant",
+                "gate_transformer_bytes_grow"):
+        out[key] = (1.0 if data.get(key) else 0.0, "higher", HARD)
+    for row in data.get("families", []):
+        key = row["family"]
+        out[f"parity_exact[{key}]"] = (
+            1.0 if row.get("parity_exact") else 0.0, "higher", HARD)
+        out[f"disp_per_tok[{key}]"] = (row["disp_per_tok"], "lower", HARD)
+        if row.get("state_kind") != "kv":
+            out[f"state_bytes_constant[{key}]"] = (
+                1.0 if row.get("state_bytes_constant") else 0.0,
+                "higher", HARD)
+        # wall-clock throughput: warn-only on shared runners
+        out[f"tok_s[{key}]"] = (row["tok_s"], "higher", SOFT)
+    return out
+
+
 EXTRACTORS = {
     "serving": _serving_metrics,
     "paging": _paging_metrics,
@@ -136,6 +158,7 @@ EXTRACTORS = {
     "spec": _spec_metrics,
     "obs": _obs_metrics,
     "traffic": _traffic_metrics,
+    "scenarios": _scenarios_metrics,
 }
 
 
@@ -206,7 +229,7 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("benchmarks", nargs="*",
                     default=["serving", "paging", "paging_graph", "spec",
-                             "obs", "traffic"],
+                             "obs", "traffic", "scenarios"],
                     help="benchmark names (BENCH_<name>.json)")
     ap.add_argument("--baseline-ref", default="HEAD",
                     help="git ref holding the committed baselines")

@@ -25,9 +25,10 @@ import numpy as np
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--model", default="bench-0.5b",
+    ap.add_argument("--model", "--config", dest="model", default="bench-0.5b",
                     help="bench-0.5b | bench-1.5b | any registry arch "
-                         "(smoke-reduced)")
+                         "(smoke-reduced), including the recurrent families "
+                         "mamba2-1.3b / recurrentgemma-9b")
     ap.add_argument("--modes", default="F0,F3,FULL,model")
     ap.add_argument("--tokens", type=int, default=50)
     ap.add_argument("--prompt-len", type=int, default=5)
@@ -62,6 +63,8 @@ def main() -> None:
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="paged only: block-pool size (default: every slot "
                          "full + two spare prefix chains)")
+    ap.add_argument("--speculative", default=None,
+                    help="paged only: draft/verify decoding ('ngram')")
     ap.add_argument("--out", default=None, help="write JSON rows here")
     ap.add_argument("--trace-out", default=None,
                     help="capture a repro.obs dispatch trace of the "
@@ -115,10 +118,21 @@ def main() -> None:
                                 readback=args.readback)
         row = rep.row()
         print(f"[serve] {row}")
-        if args.num_slots > 0 and args.kv_layout == "paged" \
-                and not backend.capabilities.paged_kv:
-            print(f"[sched] {mode}: no paged-KV support, skipping scheduler")
-        elif args.num_slots > 0:
+        caps = backend.capabilities
+        if args.num_slots > 0:
+            # fail loudly, naming the missing capability — a silently
+            # skipped scheduler run is how bad flag combos hide
+            if args.kv_layout == "paged" and not caps.paged_kv:
+                raise SystemExit(
+                    f"--kv-layout paged: backend {mode!r} for family "
+                    f"{cfg.family!r} has capabilities.paged_kv=False "
+                    f"(state_kind={caps.state_kind!r}); use --kv-layout "
+                    "dense")
+            if args.speculative and not caps.speculative:
+                raise SystemExit(
+                    f"--speculative: backend {mode!r} for family "
+                    f"{cfg.family!r} has capabilities.speculative=False "
+                    f"(state_kind={caps.state_kind!r}); drop --speculative")
             n_req = args.requests or 2 * args.num_slots
             sched = Scheduler(session, num_slots=args.num_slots,
                               continuous=args.continuous,
@@ -127,6 +141,7 @@ def main() -> None:
                               prefix_cache=args.prefix_cache,
                               block_size=args.block_size,
                               num_blocks=args.num_blocks,
+                              speculative=args.speculative,
                               tracer=tracer, metrics=metrics)
             for i in range(n_req):
                 p = rng.integers(0, cfg.vocab_size,

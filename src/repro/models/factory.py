@@ -34,6 +34,9 @@ class Model:
     decode_step: Callable[..., Tuple[Params, jax.Array]]  # (params, cache, tokens)
     init_cache: Callable[[int, int], Params]             # (batch, max_len)
     cache_spec: Callable[[int, int], Params]
+    # pooled decode with per-row positions (cache["pos"]: (B,)) — recurrent
+    # families only; None means the family has no rows-decode variant
+    decode_step_rows: Optional[Callable[..., Tuple[Params, jax.Array]]] = None
 
     # ------------------------------------------------------------------
     def loss(self, params: Params, batch: Batch, **fw_kw
@@ -158,6 +161,8 @@ def _ssm(cfg: ModelConfig) -> Model:
             p, cfg, cache, tokens),
         init_cache=lambda b, m: mamba2.init_cache(cfg, b, m),
         cache_spec=lambda b, m: mamba2.cache_spec(cfg, b, m),
+        decode_step_rows=lambda p, cache, tokens: mamba2.decode_step_rows(
+            p, cfg, cache, tokens),
     )
 
 
@@ -173,6 +178,8 @@ def _hybrid(cfg: ModelConfig) -> Model:
             p, cfg, cache, tokens),
         init_cache=lambda b, m: rglru.init_cache(cfg, b, m),
         cache_spec=lambda b, m: rglru.cache_spec(cfg, b, m),
+        decode_step_rows=lambda p, cache, tokens: rglru.decode_step_rows(
+            p, cfg, cache, tokens),
     )
 
 

@@ -293,3 +293,16 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Params,
     logits = jnp.einsum("...d,dv->...v", x, params["embed"].T,
                         preferred_element_type=jnp.float32)
     return {"conv": conv, "ssm": ssm, "pos": cache["pos"] + 1}, logits
+
+
+def decode_step_rows(params: Params, cfg: ModelConfig, cache: Params,
+                     tokens: jax.Array) -> Tuple[Params, jax.Array]:
+    """Pooled decode with per-row positions ``cache["pos"]: (B,)``.
+
+    The SSM recurrence is position-free — conv window roll, state decay
+    and readout never index by ``pos`` — so rows at different sequence
+    positions batch in one dispatch with the exact single-request math
+    (``pos + 1`` broadcasts elementwise).  This is what makes recurrent
+    continuous batching trivially byte-exact.
+    """
+    return decode_step(params, cfg, cache, tokens)

@@ -244,6 +244,32 @@ def attn_step(p: Params, cfg: ModelConfig, x: jax.Array, kc, vc, pos
     return L.linear(o.reshape(b, 1, -1), p["wo"]), kc, vc
 
 
+def attn_step_rows(p: Params, cfg: ModelConfig, x: jax.Array, kc, vc, pos
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``attn_step`` with PER-ROW positions: x (B,1,d), pos (B,) int32.
+
+    Each row writes its own ring slot (``pos % win``) and attends its own
+    valid length; rope runs at each row's absolute position, so rows at
+    different sequence depths share one dispatch with math identical to
+    the scalar-pos step — the continuous-batching requirement.
+    """
+    b = x.shape[0]
+    h = cfg.resolved_head_dim
+    win = cfg.rglru.attention_window
+    positions = pos[:, None]                      # (B, 1)
+    q = L.linear(x, p["wq"]).reshape(b, 1, cfg.num_heads, h)
+    k = L.linear(x, p["wk"]).reshape(b, 1, cfg.num_kv_heads, h)
+    v = L.linear(x, p["wv"]).reshape(b, 1, cfg.num_kv_heads, h)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    slot = jnp.mod(pos, win)                      # (B,)
+    rows = jnp.arange(b)
+    kc = kc.at[rows, slot].set(k[:, 0].astype(kc.dtype))
+    vc = vc.at[rows, slot].set(v[:, 0].astype(vc.dtype))
+    o = L.decode_attention(q, kc, vc, jnp.minimum(pos + 1, win))
+    return L.linear(o.reshape(b, 1, -1), p["wo"]), kc, vc
+
+
 # ---------------------------------------------------------------------------
 # full model
 # ---------------------------------------------------------------------------
@@ -421,23 +447,24 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
     return cache, logits
 
 
-def _layer_step(lp, cfg, x, state, kind, pos):
+def _layer_step(lp, cfg, x, state, kind, pos, attn=attn_step):
     xn = L.rmsnorm(x, lp["t_norm"], cfg.rms_eps)
     if kind == "recurrent":
         out, h, conv = recurrent_step(lp["temporal"], cfg, xn,
                                       state["h"], state["conv"])
         new_state = {"h": h, "conv": conv}
     else:
-        out, kc, vc = attn_step(lp["temporal"], cfg, xn,
-                                state["k"], state["v"], pos)
+        out, kc, vc = attn(lp["temporal"], cfg, xn,
+                           state["k"], state["v"], pos)
         new_state = {"k": kc, "v": vc}
     x = x + out
     x = x + _mlp(lp["mlp"], cfg, L.rmsnorm(x, lp["m_norm"], cfg.rms_eps))
     return x, new_state
 
 
-def decode_step(params: Params, cfg: ModelConfig, cache: Params,
-                tokens: jax.Array) -> Tuple[Params, jax.Array]:
+def _decode_with(params: Params, cfg: ModelConfig, cache: Params,
+                 tokens: jax.Array, attn) -> Tuple[Params, jax.Array]:
+    """Shared decode body; ``attn`` picks scalar-pos vs per-row ring write."""
     x = params["embed"][tokens]
     pos = cache["pos"]
     pat = cfg.rglru.pattern
@@ -452,7 +479,8 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Params,
                 sub = {"h": st[f"l{i}_h"], "conv": st[f"l{i}_conv"]}
             else:
                 sub = {"k": st[f"l{i}_k"], "v": st[f"l{i}_v"]}
-            xc, ns = _layer_step(sp[f"l{i}_{kind}"], cfg, xc, sub, kind, pos)
+            xc, ns = _layer_step(sp[f"l{i}_{kind}"], cfg, xc, sub, kind, pos,
+                                 attn)
             if kind == "recurrent":
                 new_st[f"l{i}_h"], new_st[f"l{i}_conv"] = ns["h"], ns["conv"]
             else:
@@ -465,9 +493,26 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Params,
         new_cache["super"] = sstates
     new_cache["rest"] = []
     for lp, st, kind in zip(params["rest"], cache["rest"], rest):
-        x, ns = _layer_step(lp, cfg, x, st, kind, pos)
+        x, ns = _layer_step(lp, cfg, x, st, kind, pos, attn)
         new_cache["rest"].append(ns)
     logits = jnp.einsum("...d,dv->...v",
                         L.rmsnorm(x, params["final_norm"], cfg.rms_eps),
                         params["embed"].T, preferred_element_type=jnp.float32)
     return new_cache, logits
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array) -> Tuple[Params, jax.Array]:
+    """Batch decode at ONE shared position (``cache["pos"]`` scalar)."""
+    return _decode_with(params, cfg, cache, tokens, attn_step)
+
+
+def decode_step_rows(params: Params, cfg: ModelConfig, cache: Params,
+                     tokens: jax.Array) -> Tuple[Params, jax.Array]:
+    """Pooled decode with per-row positions ``cache["pos"]: (B,)``.
+
+    Recurrent layers are position-free; the sparse-attention layers take
+    the per-row ring write path (``attn_step_rows``).  One dispatch
+    serves slots at arbitrary, different sequence depths.
+    """
+    return _decode_with(params, cfg, cache, tokens, attn_step_rows)

@@ -5,8 +5,9 @@ from repro.serving.backends import (BackendCapabilities, DispatchStats,
                                     available_backends, create_backend,
                                     get_backend, register_backend)
 from repro.serving.engine import GenerationEngine, GenerationResult
-from repro.serving.kvcache import SlotKVCache
 from repro.serving.paging import BlockPool, PagedKVCache, RadixPrefixCache
+from repro.serving.statecache import (RecurrentStateCache, SlotKVCache,
+                                      StateCache)
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.session import (BenchmarkReport, InferenceSession,
                                    Scheduler, SchedulerStats, ServeRequest,
@@ -21,7 +22,8 @@ __all__ = [
     "available_backends", "create_backend", "get_backend", "register_backend",
     "GenerationEngine", "GenerationResult", "SamplerConfig", "sample",
     "BenchmarkReport", "InferenceSession", "Scheduler", "SchedulerStats",
-    "ServeRequest", "ServeResult", "SlotKVCache",
+    "ServeRequest", "ServeResult",
+    "StateCache", "SlotKVCache", "RecurrentStateCache",
     "BlockPool", "PagedKVCache", "RadixPrefixCache",
     "Drafter", "ModelDrafter", "NgramDrafter", "SpeculativeConfig",
     "PoissonArrivals", "ReplayArrivals", "TrafficRequest",

@@ -80,6 +80,13 @@ class BackendCapabilities:
                                     # memory and back byte-exactly, so the
                                     # scheduler may preempt it (requires
                                     # paged_kv + the stacked arena layout)
+    state_kind: str = "kv"          # the StateCache class this backend's
+                                    # slot pool carries: "kv" (dense rows),
+                                    # "paged_kv" (block arena) or
+                                    # "recurrent" (constant-size slots —
+                                    # Mamba2 / RG-LRU; nothing to page, so
+                                    # paged_kv/speculative/preemption are
+                                    # honestly False for these families)
 
 
 @dataclasses.dataclass

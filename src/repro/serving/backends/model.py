@@ -10,6 +10,11 @@ Continuous batching: ``decode_batch`` runs ``transformer.decode_step_rows``
 over a slot-major ``SlotKVCache`` — every scheduler slot advances in the
 SAME single dispatch, at its own per-row cache position, so per-cycle
 dispatch overhead is paid once regardless of occupancy.
+
+Recurrent families (Mamba2 / RG-LRU) batch the same way but over a
+``RecurrentStateCache`` — constant-size per-slot state, no paging — via
+the family's own ``decode_step_rows``; those dispatches are recorded as
+``op="decode_recurrent"`` so traces distinguish the cache class.
 """
 from __future__ import annotations
 
@@ -21,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.core.engine import RunStats
 from repro.models import transformer
-from repro.serving.kvcache import SlotKVCache
+from repro.serving.statecache import RecurrentStateCache, SlotKVCache
 from repro.serving.backends.base import (BackendCapabilities, BatchState,
                                          ExecutionBackend, State, StepOutput,
                                          register_backend)
@@ -67,17 +72,31 @@ class ModelBackend(ExecutionBackend):
             from repro.serving.paging import verify_step_paged
             return verify_step_paged(p, self.cfg, ak, av, table, pos, t)
 
+        def _decode_recurrent(p, tree, pos, t):
+            cache = dict(tree, pos=pos)
+            cache, logits = model.decode_step_rows(p, cache, t)
+            tree = {k: v for k, v in cache.items() if k != "pos"}
+            return tree, logits, jnp.argmax(logits, -1).astype(jnp.int32)
+
         self._jit_prefill = jax.jit(_prefill)
         self._jit_decode = jax.jit(_decode)
         self._jit_decode_rows = jax.jit(_decode_rows, donate_argnums=(1, 2))
         self._jit_decode_paged = jax.jit(_decode_paged, donate_argnums=(1, 2))
         self._jit_extend_paged = jax.jit(_extend_paged, donate_argnums=(1, 2))
         self._jit_verify_paged = jax.jit(_verify_paged, donate_argnums=(1, 2))
+        self._jit_decode_recurrent = jax.jit(_decode_recurrent,
+                                             donate_argnums=(1,))
         batchable = self.cfg.family in ("dense", "moe")
+        # recurrent families batch decode over constant-size state slots;
+        # there is nothing to page, so the paged-only capabilities stay
+        # honestly False and the scheduler raises instead of corrupting
+        self._recurrent = (model.decode_step_rows is not None
+                           and self.cfg.family in ("ssm", "hybrid"))
         self.capabilities = BackendCapabilities(
             name=mode, dispatches_per_token=1, device_argmax=True,
-            decode_batch=batchable, paged_kv=batchable,
-            speculative=batchable, preemption=batchable)
+            decode_batch=batchable or self._recurrent,
+            paged_kv=batchable, speculative=batchable, preemption=batchable,
+            state_kind="recurrent" if self._recurrent else "kv")
 
     # ------------------------------------------------------------------
     def _run(self, fn, *args, op: str = "dispatch"
@@ -102,6 +121,10 @@ class ModelBackend(ExecutionBackend):
 
     # -- continuous batching -------------------------------------------
     def alloc_slots(self, num_slots: int) -> BatchState:
+        if self._recurrent:
+            return {"num_slots": num_slots,
+                    "rstate": RecurrentStateCache(self.model, num_slots,
+                                                  self.max_len)}
         if not self.capabilities.decode_batch:
             return super().alloc_slots(num_slots)
         return {"num_slots": num_slots,
@@ -110,6 +133,11 @@ class ModelBackend(ExecutionBackend):
 
     def admit_slot(self, bstate: BatchState, slot: int, state: State
                    ) -> BatchState:
+        if "rstate" in bstate:
+            rs: RecurrentStateCache = bstate["rstate"]
+            rs.allocate(slot)
+            rs.write(slot, state["cache"])
+            return bstate
         if "kv" not in bstate:
             return super().admit_slot(bstate, slot, state)
         cache = state["cache"]
@@ -123,6 +151,9 @@ class ModelBackend(ExecutionBackend):
                      tokens=None) -> BatchState:
         if "paged" in bstate:
             return super().release_slot(bstate, slot, tokens)
+        if "rstate" in bstate:
+            bstate["rstate"].free(slot)
+            return bstate
         if "kv" not in bstate:
             return super().release_slot(bstate, slot)
         bstate["kv"].free(slot)
@@ -133,6 +164,8 @@ class ModelBackend(ExecutionBackend):
         """ONE dispatch advances every slot at its own cache position."""
         if "paged" in bstate:
             return self._decode_batch_paged(bstate, tokens, slots)
+        if "rstate" in bstate:
+            return self._decode_batch_recurrent(bstate, tokens, slots)
         if "kv" not in bstate:
             return super().decode_batch(bstate, tokens, slots)
         kv: SlotKVCache = bstate["kv"]
@@ -146,6 +179,24 @@ class ModelBackend(ExecutionBackend):
                      op="decode_batch")
         kv.tree = {"k": k, "v": v}
         kv.advance(slots)
+        return bstate, StepOutput(logits, nxt)
+
+    def _decode_batch_recurrent(self, bstate: BatchState, tokens,
+                                slots: Sequence[int]
+                                ) -> Tuple[BatchState, StepOutput]:
+        """ONE dispatch advances every recurrent slot's constant-size
+        state at its own per-row position (``op="decode_recurrent"``)."""
+        rs: RecurrentStateCache = bstate["rstate"]
+        t0 = time.perf_counter()
+        tree, logits, nxt = self._jit_decode_recurrent(
+            self.params, rs.tree, jnp.asarray(rs.pos),
+            jnp.asarray(tokens, jnp.int32))
+        enq = time.perf_counter() - t0
+        self._record(RunStats(wall_s=enq, dispatches=1, shape_ops=0,
+                              sync_mode="none", enqueue_s=enq),
+                     op="decode_recurrent")
+        rs.tree = tree
+        rs.advance(slots)
         return bstate, StepOutput(logits, nxt)
 
     # -- paged KV: block pool + radix prefix cache + chunked prefill ------

@@ -1,28 +1,22 @@
 """KV-cache utilities bridging the model cache layout (stacked layer axis)
-and the dispatch-graph layout (one named input per layer), plus the
-slot-major ``SlotKVCache`` pool continuous batching decodes against."""
+and the dispatch-graph layout (one named input per layer).
+
+The slot-major ``SlotKVCache`` pool now lives behind the ``StateCache``
+protocol in ``repro.serving.statecache`` (alongside the paged and
+recurrent cache classes); it is re-exported here so existing imports
+keep working.
+"""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Set
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import ModelConfig
-
-
-def empty_graph_cache(cfg: ModelConfig, batch: int, max_len: int
-                      ) -> Dict[str, jax.Array]:
-    """Per-layer cache inputs for a decode OpGraph."""
-    hd = cfg.resolved_head_dim
-    dt = jnp.dtype(cfg.dtype)
-    out: Dict[str, jax.Array] = {}
-    for i in range(cfg.num_layers):
-        out[f"k_cache_{i}"] = jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dt)
-        out[f"v_cache_{i}"] = jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dt)
-    return out
+from repro.serving.statecache.slotkv import (  # noqa: F401  (compat re-export)
+    SlotKVCache,
+    empty_graph_cache,
+)
 
 
 def load_prefix(graph_cache: Dict[str, jax.Array], prefill_out: Dict[str, Any],
@@ -55,145 +49,3 @@ def graph_to_stacked(inputs: Dict[str, jax.Array], num_layers: int,
         "v": jnp.stack([inputs[f"v_cache_{i}"] for i in range(num_layers)]),
         "pos": jnp.asarray(pos, jnp.int32),
     }
-
-
-# ---------------------------------------------------------------------------
-# slot-major KV pool (continuous batching)
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnums=2, donate_argnums=0)
-def _scatter_slot(tree, row_tree, slot_axis: int, slot):
-    """Write one request's KV row into the pool at ``slot`` (donated)."""
-    return jax.tree.map(
-        lambda pool, row: jax.lax.dynamic_update_slice_in_dim(
-            pool, row.astype(pool.dtype), slot, axis=slot_axis),
-        tree, row_tree)
-
-
-@functools.partial(jax.jit, static_argnums=1)
-def _gather_slot(tree, slot_axis: int, slot):
-    """Pull one slot's KV row back out of the pool (size-1 slot axis)."""
-    return jax.tree.map(
-        lambda pool: jax.lax.dynamic_slice_in_dim(pool, slot, 1,
-                                                  axis=slot_axis),
-        tree)
-
-
-class SlotKVCache:
-    """Slot-major stacked KV pool: one contiguous cache for ALL slots.
-
-    Continuous batching needs every slot's KV resident in one batched
-    layout so a single decode dispatch can attend for every active request.
-    The pool is a pytree of device arrays whose ``slot_axis`` indexes the
-    scheduler slot:
-
-    * model layout  — ``{"k": (L, S, max_len, KV, hd), "v": …}``, slot
-      axis 1 (the transformer's stacked-layer cache, batch dim = slots);
-    * graph layout  — ``{"k_cache_i": (S, max_len, KV, hd), …}``, slot
-      axis 0 (one named input per layer, as the decode OpGraph consumes).
-
-    Host-side bookkeeping: ``pos`` (numpy (S,) int32 per-slot valid
-    lengths — authoritative, handed to the device each cycle) and a free
-    list.  ``allocate``/``free`` manage slots; ``write`` scatters one
-    prefilled request row in (overwriting the FULL row, so a reused slot
-    can never leak the previous request's KV); ``gather`` slices one row
-    back out (tests / debugging).
-    """
-
-    def __init__(self, tree: Dict[str, jax.Array], num_slots: int, *,
-                 slot_axis: int = 0) -> None:
-        self.tree = tree
-        self.num_slots = num_slots
-        self.slot_axis = slot_axis
-        self.pos = np.zeros((num_slots,), np.int32)
-        self._free: List[int] = list(range(num_slots))
-        self._live: Set[int] = set()
-
-    # -- constructors ---------------------------------------------------
-    @classmethod
-    def for_model(cls, cfg: ModelConfig, num_slots: int, max_len: int
-                  ) -> "SlotKVCache":
-        hd = cfg.resolved_head_dim
-        dt = jnp.dtype(cfg.dtype)
-        shape = (cfg.num_layers, num_slots, max_len, cfg.num_kv_heads, hd)
-        return cls({"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)},
-                   num_slots, slot_axis=1)
-
-    @classmethod
-    def for_graph(cls, cfg: ModelConfig, num_slots: int, max_len: int
-                  ) -> "SlotKVCache":
-        return cls(empty_graph_cache(cfg, num_slots, max_len), num_slots,
-                   slot_axis=0)
-
-    # -- slot lifecycle -------------------------------------------------
-    @property
-    def occupancy(self) -> int:
-        return len(self._live)
-
-    @property
-    def num_free(self) -> int:
-        return len(self._free)
-
-    def allocate(self, slot: Optional[int] = None) -> int:
-        """Claim a free slot (lowest index, or a specific one).  Raises if
-        the pool is full or the requested slot is already live."""
-        if slot is None:
-            if not self._free:
-                raise RuntimeError(f"KV pool full ({self.num_slots} slots)")
-            slot = min(self._free)
-        if slot in self._live:
-            raise RuntimeError(f"slot {slot} already allocated")
-        if not 0 <= slot < self.num_slots:
-            raise IndexError(f"slot {slot} out of range [0, {self.num_slots})")
-        self._free.remove(slot)
-        self._live.add(slot)
-        return slot
-
-    def free(self, slot: int) -> None:
-        """Release a slot: pos → 0, slot returns to the free list.  The KV
-        row itself is left in place — ``write`` on re-allocation replaces
-        the entire row before any decode can read it."""
-        if slot not in self._live:
-            raise RuntimeError(f"slot {slot} is not allocated")
-        self._live.discard(slot)
-        self._free.append(slot)
-        self.pos[slot] = 0
-
-    # -- device data movement -------------------------------------------
-    def write(self, slot: int, row_tree: Dict[str, jax.Array],
-              length: int) -> None:
-        """Scatter one request's prefilled KV (size-1 slot axis, FULL
-        ``max_len`` extent) into the pool at ``slot``."""
-        if slot not in self._live:
-            raise RuntimeError(f"write to unallocated slot {slot}")
-        self.tree = _scatter_slot(self.tree, row_tree, self.slot_axis,
-                                  jnp.int32(slot))
-        self.pos[slot] = int(length)
-
-    def gather(self, slot: int) -> Dict[str, jax.Array]:
-        """One slot's KV row (size-1 slot axis) — test/debug readout."""
-        return _gather_slot(self.tree, self.slot_axis, jnp.int32(slot))
-
-    def advance(self, slots) -> None:
-        """Host-side position bump for the slots a decode cycle fed."""
-        for s in slots:
-            self.pos[s] += 1
-
-    # -- memory accounting (dense-vs-paged utilization table) -----------
-    @property
-    def bytes_allocated(self) -> int:
-        """Full pool footprint — dense reserves max_len for every slot."""
-        total = 0
-        for a in jax.tree.leaves(self.tree):
-            n = 1
-            for d in a.shape:
-                n *= d
-            total += n * jnp.dtype(a.dtype).itemsize
-        return total
-
-    @property
-    def bytes_live(self) -> int:
-        """Bytes holding actual sequence data (Σ live-slot pos tokens)."""
-        max_len = jax.tree.leaves(self.tree)[0].shape[self.slot_axis + 1]
-        per_token = self.bytes_allocated // (self.num_slots * max_len)
-        return int(sum(int(self.pos[s]) for s in self._live)) * per_token

@@ -26,13 +26,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import heapq
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.serving.statecache.base import StateCache
 
 
 def _ceildiv(a: int, b: int) -> int:
@@ -259,24 +260,28 @@ class SwappedChain:
         return sum(k.nbytes + v.nbytes for k, v in self.host.values())
 
 
-class PagedKVCache:
-    """Slot bookkeeping over a ``BlockPool``: the paged ``SlotKVCache``.
+class PagedKVCache(StateCache):
+    """Slot bookkeeping over a ``BlockPool``: the paged ``StateCache``.
 
     Each scheduler slot owns a **block table** row (``(width,)`` int32 of
     arena block ids; unpopulated entries point at the trash block) plus a
-    ``pos`` valid-length, mirroring the dense pool's host contract
-    (``allocate``/``free``/``advance``/``occupancy``).  Blocks are claimed
-    lazily as the sequence crosses block boundaries (``ensure_writable``)
-    and shared prefixes are adopted by reference from the radix cache
-    (``adopt_prefix``), with the boundary partial block COW-forked so the
-    new request can append without touching shared state.
+    ``pos`` valid-length; the slot lifecycle itself (free list, live set,
+    ``allocate``/``free``/``advance``/``occupancy``) is the shared
+    ``StateCache`` contract, with the paged specifics in the
+    ``_on_allocate``/``_on_free`` hooks (owned-block list, decref + table
+    reset).  Blocks are claimed lazily as the sequence crosses block
+    boundaries (``ensure_writable``) and shared prefixes are adopted by
+    reference from the radix cache (``adopt_prefix``), with the boundary
+    partial block COW-forked so the new request can append without
+    touching shared state.
     """
+
+    state_kind = "paged_kv"
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int, *,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  table_slack: int = 0, layout: str = "stacked") -> None:
         self.block_size = block_size
-        self.num_slots = num_slots
         self.max_len = max_len
         # chunked prefill pads the final chunk, so tables cover a little
         # more than max_len; padded writes land in blocks decode reuses
@@ -288,53 +293,23 @@ class PagedKVCache:
         self.trash = self.pool.alloc()          # block 0: don't-care writes
         assert self.trash == 0
         self.table = np.zeros((num_slots, self.width), np.int32)
-        self.pos = np.zeros((num_slots,), np.int32)
-        self._free: List[int] = list(range(num_slots))
-        self._live: Set[int] = set()
         self._owned: Dict[int, List[int]] = {}
+        self._init_slots(num_slots)
         self.radix = None                       # set by the owning backend
         self.cow_copies = 0
         from repro.obs.tracer import NULL_TRACER
         self.tracer = NULL_TRACER               # set by the scheduler
 
-    # -- slot lifecycle (mirrors SlotKVCache) ---------------------------
-    @property
-    def occupancy(self) -> int:
-        return len(self._live)
-
-    @property
-    def num_free(self) -> int:
-        return len(self._free)
-
-    def allocate(self, slot: Optional[int] = None) -> int:
-        if slot is None:
-            if not self._free:
-                raise RuntimeError(f"KV pool full ({self.num_slots} slots)")
-            slot = min(self._free)
-        if slot in self._live:
-            raise RuntimeError(f"slot {slot} already allocated")
-        if not 0 <= slot < self.num_slots:
-            raise IndexError(f"slot {slot} out of range [0, {self.num_slots})")
-        self._free.remove(slot)
-        self._live.add(slot)
+    # -- StateCache hooks ------------------------------------------------
+    def _on_allocate(self, slot: int) -> None:
         self._owned[slot] = []
-        return slot
 
-    def free(self, slot: int) -> None:
-        """Release a slot: drop every block reference it holds.  Blocks the
-        radix cache (or another slot) still references stay live."""
-        if slot not in self._live:
-            raise RuntimeError(f"slot {slot} is not allocated")
+    def _on_free(self, slot: int) -> None:
+        """Drop every block reference the slot holds.  Blocks the radix
+        cache (or another slot) still references stay live."""
         for bid in self._owned.pop(slot):
             self.pool.decref(bid)
-        self._live.discard(slot)
-        self._free.append(slot)
         self.table[slot, :] = self.trash
-        self.pos[slot] = 0
-
-    def advance(self, slots: Sequence[int]) -> None:
-        for s in slots:
-            self.pos[s] += 1
 
     # -- block management -----------------------------------------------
     def _alloc_block(self) -> int:

@@ -810,7 +810,7 @@ class Scheduler:
         return prompt
 
     def _track_kv(self, bstate, st: SchedulerStats) -> None:
-        kv = bstate.get("paged") or bstate.get("kv")
+        kv = bstate.get("paged") or bstate.get("kv") or bstate.get("rstate")
         if kv is not None:
             if not st.kv_bytes_allocated:    # constant per pool: compute once
                 st.kv_bytes_allocated = kv.bytes_allocated
@@ -1204,13 +1204,17 @@ class Scheduler:
     # -- paged KV + radix prefix cache + chunked prefill -----------------
     def _run_paged(self, st: SchedulerStats) -> Dict[str, ServeResult]:
         backend = self.session.backend
-        if not backend.capabilities.paged_kv:
+        caps = backend.capabilities
+        if not caps.paged_kv:
+            hint = (f" (state_kind={caps.state_kind!r}: constant-size "
+                    "recurrent slots have nothing to page)"
+                    if caps.state_kind == "recurrent" else "")
             raise ValueError(
-                f"backend {backend.capabilities.name!r} has no paged-KV "
-                "support; use kv_layout='dense'")
-        if self._spec is not None and not backend.capabilities.speculative:
+                f"backend {caps.name!r} has no paged-KV "
+                f"support{hint}; use kv_layout='dense'")
+        if self._spec is not None and not caps.speculative:
             raise ValueError(
-                f"backend {backend.capabilities.name!r} has no speculative "
+                f"backend {caps.name!r} has no speculative "
                 "verify; drop speculative= or use the model backend")
         if self._bstate is None:
             self._bstate = backend.alloc_slots_paged(

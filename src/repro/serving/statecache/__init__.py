@@ -1,0 +1,20 @@
+"""State-cache protocol: one slot-pool contract, three cache classes.
+
+* ``StateCache``          — the protocol (lifecycle + accounting)
+* ``SlotKVCache``         — dense transformer KV rows (``state_kind="kv"``)
+* ``PagedKVCache``        — block-arena KV (``serving/paging``,
+                            ``state_kind="paged_kv"``)
+* ``RecurrentStateCache`` — constant-size Mamba2 / RG-LRU state
+                            (``state_kind="recurrent"``)
+"""
+from repro.serving.statecache.base import StateCache, tree_bytes
+from repro.serving.statecache.recurrent import RecurrentStateCache
+from repro.serving.statecache.slotkv import SlotKVCache, empty_graph_cache
+
+__all__ = [
+    "StateCache",
+    "tree_bytes",
+    "SlotKVCache",
+    "RecurrentStateCache",
+    "empty_graph_cache",
+]

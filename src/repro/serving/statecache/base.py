@@ -1,0 +1,131 @@
+"""The ``StateCache`` protocol — ONE slot-pool contract for every cache
+class the scheduler serves against.
+
+Transformer KV is only one way to carry per-request decode state.  The
+paper's dispatch-overhead argument applies to every model family — and
+recurrent families (Mamba2's SSM state, RG-LRU's hidden + ring-window
+KV) carry a *different, cheaper* cache class: constant-size per slot,
+no paging, O(1) alloc/free/fork.  ``StateCache`` abstracts what the
+scheduler actually depends on — slot lifecycle, per-slot positions, and
+honest memory accounting — so ``SlotKVCache`` (dense rows),
+``PagedKVCache`` (block arena) and ``RecurrentStateCache`` (constant
+slots) are interchangeable behind the backend slot contract
+(``alloc_slots`` / ``admit_slot`` / ``decode_batch`` / ``release_slot``).
+
+The host bookkeeping (free list, live set, ``pos`` vector) is identical
+across implementations and lives HERE once; subclasses hook
+``_on_allocate`` / ``_on_free`` for their device-side specifics and own
+all data movement (their layouts differ too much to share it).
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, List, Optional, Sequence, Set
+
+import jax
+import numpy as np
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total byte footprint of an ARBITRARY state pytree.
+
+    Sums every leaf's own size × itemsize — no KV-shaped assumptions, so
+    the memory columns in benchmark tables stay honest for conv buffers,
+    SSM states, ring-window KVs, and mixed-dtype trees alike.
+    """
+    total = 0
+    for a in jax.tree.leaves(tree):
+        n = 1
+        for d in a.shape:
+            n *= d
+        total += n * np.dtype(a.dtype).itemsize
+    return total
+
+
+class StateCache(abc.ABC):
+    """Slot-pool contract the scheduler and the backend slot API share.
+
+    * ``state_kind`` names the cache class (``"kv"`` / ``"paged_kv"`` /
+      ``"recurrent"``) — surfaced through ``BackendCapabilities`` so
+      unsupported paths (paging a recurrent state, speculating over a
+      ring buffer) raise instead of corrupting.
+    * slot lifecycle: ``allocate`` / ``free`` over a fixed ``num_slots``,
+      with ``pos`` the host-authoritative per-slot valid length and
+      ``advance`` the per-cycle bump.
+    * memory accounting: ``bytes_allocated`` (full pool footprint) vs
+      ``bytes_live`` (bytes holding actual request state) — the
+      dense-vs-paged-vs-recurrent utilization comparison.
+    """
+
+    state_kind: str = "kv"
+
+    num_slots: int
+    pos: np.ndarray
+    _free: List[int]
+    _live: Set[int]
+
+    def _init_slots(self, num_slots: int) -> None:
+        self.num_slots = num_slots
+        self.pos = np.zeros((num_slots,), np.int32)
+        self._free = list(range(num_slots))
+        self._live = set()
+
+    # -- slot lifecycle -------------------------------------------------
+    @property
+    def occupancy(self) -> int:
+        return len(self._live)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def allocate(self, slot: Optional[int] = None) -> int:
+        """Claim a free slot (lowest index, or a specific one).  Raises if
+        the pool is full or the requested slot is already live."""
+        if slot is None:
+            if not self._free:
+                raise RuntimeError(f"KV pool full ({self.num_slots} slots)")
+            slot = min(self._free)
+        if slot in self._live:
+            raise RuntimeError(f"slot {slot} already allocated")
+        if not 0 <= slot < self.num_slots:
+            raise IndexError(f"slot {slot} out of range [0, {self.num_slots})")
+        self._free.remove(slot)
+        self._live.add(slot)
+        self._on_allocate(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Release a slot: pos → 0, slot returns to the free list.  What
+        happens to the slot's device state is the subclass's business
+        (dense rows stay in place until the next full-row write; paged
+        tables drop their block references)."""
+        if slot not in self._live:
+            raise RuntimeError(f"slot {slot} is not allocated")
+        self._on_free(slot)
+        self._live.discard(slot)
+        self._free.append(slot)
+        self.pos[slot] = 0
+
+    def advance(self, slots: Sequence[int]) -> None:
+        """Host-side position bump for the slots a decode cycle fed."""
+        for s in slots:
+            self.pos[s] += 1
+
+    # -- subclass hooks -------------------------------------------------
+    def _on_allocate(self, slot: int) -> None:
+        """Per-slot setup at claim time (e.g. the paged owned-block list)."""
+
+    def _on_free(self, slot: int) -> None:
+        """Per-slot teardown at release time (e.g. dropping block refs)."""
+
+    # -- memory accounting ----------------------------------------------
+    @property
+    @abc.abstractmethod
+    def bytes_allocated(self) -> int:
+        """Full pool footprint in bytes."""
+
+    @property
+    @abc.abstractmethod
+    def bytes_live(self) -> int:
+        """Bytes holding actual request state (the utilization numerator)."""

@@ -1,0 +1,161 @@
+"""Constant-size recurrent state slots — the Mamba2 / RG-LRU cache class.
+
+Recurrent families carry O(1) decode state per request: Mamba2 a conv
+window + SSM state, RG-LRU an LRU hidden + conv window + a RING-buffer
+window-KV for its sparse-attention layers.  Nothing grows with sequence
+length, so the transformer cache machinery is the wrong tool — there is
+nothing to page, and "utilization" is always 100% of a fixed footprint.
+This cache therefore skips paging entirely and gives O(1) alloc / free /
+fork: the pool is the family's own ``init_cache(num_slots, …)`` pytree
+(batch dim = slots), and per-slot movement is one scatter/gather of
+constant-size rows.
+
+The ONE structural assumption: the family cache is a dict whose
+top-level ``"pos"`` leaf is the scalar position and whose every OTHER
+leaf carries the batch (= slot) dimension somewhere.  Both mamba2 and
+rglru satisfy this; the slot axis of each leaf is DERIVED (not guessed)
+by diffing ``cache_spec`` at two batch sizes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.statecache.base import StateCache, tree_bytes
+
+
+def _slot_axes(model: Any, max_len: int) -> Tuple[int, ...]:
+    """Derive each non-pos leaf's slot (batch) axis from ``cache_spec``.
+
+    Compare leaf shapes at batch=2 vs batch=3: the slot axis is the one
+    axis whose extent grew by exactly 1.  Anything else — zero axes, or
+    several (a leaf whose other dims depend on batch) — means the family
+    cache doesn't fit the one-slot-axis contract, and we refuse rather
+    than scatter into the wrong dimension.
+    """
+    spec2 = {k: v for k, v in model.cache_spec(2, max_len).items() if k != "pos"}
+    spec3 = {k: v for k, v in model.cache_spec(3, max_len).items() if k != "pos"}
+    axes: List[int] = []
+    leaves2, treedef2 = jax.tree.flatten(spec2)
+    leaves3, treedef3 = jax.tree.flatten(spec3)
+    if treedef2 != treedef3:
+        raise ValueError("cache_spec tree structure depends on batch size")
+    for a2, a3 in zip(leaves2, leaves3):
+        diff = [i for i, (d2, d3) in enumerate(zip(a2.shape, a3.shape))
+                if d3 - d2 == 1]
+        same = [i for i, (d2, d3) in enumerate(zip(a2.shape, a3.shape))
+                if d2 == d3]
+        if len(a2.shape) != len(a3.shape) or len(diff) != 1 \
+                or len(diff) + len(same) != len(a2.shape):
+            raise ValueError(
+                f"cannot derive slot axis for cache leaf with shapes "
+                f"{a2.shape} (batch=2) vs {a3.shape} (batch=3)")
+        axes.append(diff[0])
+    return tuple(axes)
+
+
+@functools.partial(jax.jit, static_argnums=2, donate_argnums=0)
+def _scatter_rows(leaves, row_leaves, axes: Tuple[int, ...], slot):
+    """Write one request's constant-size state rows into the pool."""
+    return [jax.lax.dynamic_update_slice_in_dim(
+                pool, row.astype(pool.dtype), slot, axis=ax)
+            for pool, row, ax in zip(leaves, row_leaves, axes)]
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _gather_rows(leaves, axes: Tuple[int, ...], slot):
+    """Slice one slot's constant-size state rows back out (size-1 axis)."""
+    return [jax.lax.dynamic_slice_in_dim(pool, slot, 1, axis=ax)
+            for pool, ax in zip(leaves, axes)]
+
+
+class RecurrentStateCache(StateCache):
+    """Fixed-footprint slot pool for recurrent-family decode state.
+
+    * ``tree`` is the family cache for ``num_slots`` requests at once
+      (the "pos" scalar stripped — positions are per-slot and live in
+      the host ``pos`` vector the scheduler already understands).
+    * ``write(slot, cache)`` admits a batch-1 prefilled cache;
+      ``gather(slot)`` reconstitutes a batch-1 cache (with its scalar
+      pos) for hand-off back to the raw decode loop.
+    * ``fork``/``restore`` snapshot one slot's rows — O(state size),
+      which for this class is O(1) in sequence length.  That is the
+      whole point: no pages, no block refcounts, no COW bookkeeping.
+    * ``bytes_live`` is occupancy × the constant per-slot footprint —
+      independent of how long each request has decoded, which the
+      scenarios bench demonstrates against transformer KV.
+    """
+
+    state_kind = "recurrent"
+
+    def __init__(self, model: Any, num_slots: int, max_len: int) -> None:
+        init = model.init_cache(num_slots, max_len)
+        if not isinstance(init, dict) or "pos" not in init:
+            raise ValueError(
+                f"family {model.cfg.family!r} cache is not a dict with a "
+                f"top-level 'pos' — RecurrentStateCache cannot manage it")
+        self.tree = {k: v for k, v in init.items() if k != "pos"}
+        self._treedef = jax.tree.structure(self.tree)
+        self._axes = _slot_axes(model, max_len)
+        self.max_len = max_len
+        self._init_slots(num_slots)
+
+    # -- device data movement -------------------------------------------
+    def write(self, slot: int, cache: Dict[str, Any]) -> None:
+        """Admit one request's prefilled batch-1 cache into ``slot``."""
+        if slot not in self._live:
+            raise RuntimeError(f"write to unallocated slot {slot}")
+        rows = {k: v for k, v in cache.items() if k != "pos"}
+        leaves = jax.tree.leaves(self.tree)
+        row_leaves = self._treedef.flatten_up_to(rows)
+        self.tree = jax.tree.unflatten(
+            self._treedef,
+            _scatter_rows(leaves, row_leaves, self._axes, jnp.int32(slot)))
+        self.pos[slot] = int(cache["pos"])
+
+    def gather(self, slot: int) -> Dict[str, Any]:
+        """One slot's state as a batch-1 family cache (scalar pos back)."""
+        leaves = jax.tree.leaves(self.tree)
+        out = jax.tree.unflatten(
+            self._treedef, _gather_rows(leaves, self._axes, jnp.int32(slot)))
+        out["pos"] = jnp.int32(int(self.pos[slot]))
+        return out
+
+    # -- O(1) snapshot / restore ----------------------------------------
+    def fork(self, slot: int) -> Dict[str, Any]:
+        """Snapshot one slot's rows — constant size, no page bookkeeping."""
+        if slot not in self._live:
+            raise RuntimeError(f"fork of unallocated slot {slot}")
+        return self.gather(slot)
+
+    def restore(self, record: Dict[str, Any],
+                slot: Optional[int] = None) -> int:
+        """Materialize a fork into a (new or given) slot."""
+        slot = self.allocate(slot)
+        self.write(slot, record)
+        return slot
+
+    # -- memory accounting ----------------------------------------------
+    @property
+    def bytes_per_slot(self) -> int:
+        """The constant per-request footprint (the bench's key column)."""
+        return tree_bytes(self.tree) // self.num_slots
+
+    @property
+    def bytes_allocated(self) -> int:
+        return tree_bytes(self.tree)
+
+    @property
+    def bytes_live(self) -> int:
+        """Occupancy × constant slot footprint — sequence-length-free."""
+        return self.occupancy * self.bytes_per_slot
+
+
+def ring_positions(pos: np.ndarray, window: int) -> np.ndarray:
+    """Ring-buffer write slots for per-slot positions (debug/test aid)."""
+    return np.mod(pos, window)

@@ -1,0 +1,133 @@
+"""Dense slot-major KV pool — the transformer ``StateCache``.
+
+Continuous batching needs every slot's KV resident in one batched layout
+so a single decode dispatch can attend for every active request; this is
+the dense (reserve ``max_len`` per slot) implementation.  The paged twin
+is ``serving/paging``; the constant-size recurrent twin is
+``statecache/recurrent.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.statecache.base import StateCache, tree_bytes
+
+
+def empty_graph_cache(cfg: ModelConfig, batch: int, max_len: int
+                      ) -> Dict[str, jax.Array]:
+    """Per-layer cache inputs for a decode OpGraph."""
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, jax.Array] = {}
+    for i in range(cfg.num_layers):
+        out[f"k_cache_{i}"] = jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dt)
+        out[f"v_cache_{i}"] = jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dt)
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=2, donate_argnums=0)
+def _scatter_slot(tree, row_tree, slot_axis: int, slot):
+    """Write one request's KV row into the pool at ``slot`` (donated)."""
+    return jax.tree.map(
+        lambda pool, row: jax.lax.dynamic_update_slice_in_dim(
+            pool, row.astype(pool.dtype), slot, axis=slot_axis),
+        tree, row_tree)
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _gather_slot(tree, slot_axis: int, slot):
+    """Pull one slot's KV row back out of the pool (size-1 slot axis)."""
+    return jax.tree.map(
+        lambda pool: jax.lax.dynamic_slice_in_dim(pool, slot, 1,
+                                                  axis=slot_axis),
+        tree)
+
+
+class SlotKVCache(StateCache):
+    """Slot-major stacked KV pool: one contiguous cache for ALL slots.
+
+    The pool is a pytree of device arrays whose ``slot_axis`` indexes the
+    scheduler slot:
+
+    * model layout  — ``{"k": (L, S, max_len, KV, hd), "v": …}``, slot
+      axis 1 (the transformer's stacked-layer cache, batch dim = slots);
+    * graph layout  — ``{"k_cache_i": (S, max_len, KV, hd), …}``, slot
+      axis 0 (one named input per layer, as the decode OpGraph consumes).
+
+    Host-side bookkeeping (free list + ``pos``) comes from ``StateCache``;
+    ``write`` scatters one prefilled request row in (overwriting the FULL
+    row, so a reused slot can never leak the previous request's KV);
+    ``gather`` slices one row back out (tests / debugging).
+    """
+
+    state_kind = "kv"
+
+    def __init__(self, tree: Dict[str, jax.Array], num_slots: int, *,
+                 slot_axis: int = 0) -> None:
+        self.tree = tree
+        self.slot_axis = slot_axis
+        self._init_slots(num_slots)
+
+    # -- constructors ---------------------------------------------------
+    @classmethod
+    def for_model(cls, cfg: ModelConfig, num_slots: int, max_len: int
+                  ) -> "SlotKVCache":
+        hd = cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.dtype)
+        shape = (cfg.num_layers, num_slots, max_len, cfg.num_kv_heads, hd)
+        return cls({"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)},
+                   num_slots, slot_axis=1)
+
+    @classmethod
+    def for_graph(cls, cfg: ModelConfig, num_slots: int, max_len: int
+                  ) -> "SlotKVCache":
+        return cls(empty_graph_cache(cfg, num_slots, max_len), num_slots,
+                   slot_axis=0)
+
+    # -- device data movement -------------------------------------------
+    def write(self, slot: int, row_tree: Dict[str, jax.Array],
+              length: int) -> None:
+        """Scatter one request's prefilled KV (size-1 slot axis, FULL
+        ``max_len`` extent) into the pool at ``slot``."""
+        if slot not in self._live:
+            raise RuntimeError(f"write to unallocated slot {slot}")
+        self.tree = _scatter_slot(self.tree, row_tree, self.slot_axis,
+                                  jnp.int32(slot))
+        self.pos[slot] = int(length)
+
+    def gather(self, slot: int) -> Dict[str, jax.Array]:
+        """One slot's KV row (size-1 slot axis) — test/debug readout."""
+        return _gather_slot(self.tree, self.slot_axis, jnp.int32(slot))
+
+    # -- memory accounting (dense-vs-paged utilization table) -----------
+    @property
+    def bytes_allocated(self) -> int:
+        """Full pool footprint — dense reserves max_len for every slot."""
+        return tree_bytes(self.tree)
+
+    @property
+    def bytes_live(self) -> int:
+        """Bytes holding actual sequence data (Σ live-slot pos tokens).
+
+        Computed PER LEAF: each leaf's token extent is its own
+        ``slot_axis + 1`` dimension, so trees whose leaves differ in
+        max_len, head count, or dtype are summed honestly — no uniform
+        KV-shaped-leaf assumption.
+        """
+        live_tokens = int(sum(int(self.pos[s]) for s in self._live))
+        total = 0
+        for a in jax.tree.leaves(self.tree):
+            per_slot = 1
+            for d in a.shape:
+                per_slot *= d
+            per_slot = per_slot // a.shape[self.slot_axis]  # drop slot dim
+            max_len = a.shape[self.slot_axis + 1]
+            per_token = per_slot // max_len * np.dtype(a.dtype).itemsize
+            total += live_tokens * per_token
+        return total
