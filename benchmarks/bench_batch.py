@@ -29,12 +29,14 @@ from repro.configs.bench import BENCH_05B, BENCH_15B
 from repro.core.graphs import LEVELS, build_decode_graph
 from repro.models import build_model
 from repro.serving import (InferenceSession, ModelDrafter, Scheduler,
-                           ServeRequest, SpeculativeConfig, create_backend)
+                           SchedulerConfig, ServeRequest, SpeculativeConfig,
+                           create_backend)
 from repro.serving.backends.graph import GRAPH_MODES
 
 BATCHES = (1, 2, 4, 8)
 SLOT_SWEEP = (1, 2, 4, 8)
 GATE_SLOTS = 4       # the CI gate compares this occupancy vs 1-slot seq
+DECODE_HORIZON = 8   # multi-step capture: decode cycles per host super-step
 
 
 def run(quick: bool = False, tokens: int = 20) -> List[Dict]:
@@ -85,18 +87,22 @@ def run(quick: bool = False, tokens: int = 20) -> List[Dict]:
 # ---------------------------------------------------------------------------
 
 def _schedule(session, prompts, tokens: int, num_slots: int,
-              continuous: bool):
+              continuous: bool, horizon: int = 1):
     """One scheduler pass over ``prompts``; returns (results, stats)."""
-    sched = Scheduler(session, num_slots=num_slots, continuous=continuous)
+    sched = Scheduler(session, config=SchedulerConfig(
+        num_slots=num_slots, continuous=continuous,
+        decode_horizon=horizon))
     ids = [sched.submit(ServeRequest(prompt=p, max_new_tokens=tokens,
-                                     request_id=f"s{num_slots}-r{i}"))
+                                     request_id=f"s{num_slots}-h{horizon}"
+                                                f"-r{i}"))
            for i, p in enumerate(prompts)]
     results = sched.run()
     return [results[rid] for rid in ids], sched.last_stats
 
 
 def run_serving(quick: bool = False, tokens: int = 16,
-                modes=("F3", "model"), gate: float = 0.0) -> Dict:
+                modes=("F3", "model"), gate: float = 0.0,
+                gate_multistep: bool = False) -> Dict:
     """tok/s vs. concurrent requests, dispatches/token vs. occupancy.
 
     For each slot count S the same S overlapping requests run twice: the
@@ -165,6 +171,61 @@ def run_serving(quick: bool = False, tokens: int = 16,
                        "disp_per_tok_continuous", "disp_per_tok_sequential",
                        "mean_occupancy", "ttft_p50_ms", "ttft_p99_ms",
                        "tpot_p50_ms"])
+    # -- multi-step decode capture: N cycles per host submission ---------
+    # Same prompts through the gate mode at GATE_SLOTS occupancy, horizon
+    # 1 vs DECODE_HORIZON.  Token budget = 1 + 2×horizon so every
+    # super-step runs the full horizon; a separate max_new=1 pass
+    # measures the prefill dispatch share so the decode-stream
+    # amortization can be gated exactly (prefill is identical either
+    # way and would otherwise dilute the N× claim).
+    ms_tokens = 1 + 2 * DECODE_HORIZON
+    ms_mode = modes[0]
+    backend = create_backend(ms_mode, model, params, batch=1,
+                             max_len=plen + ms_tokens + 4)
+    session = InferenceSession(backend)
+    ms_prompts = [rng.integers(0, BENCH_05B.vocab_size, size=(1, plen))
+                  .astype(np.int32) for _ in range(GATE_SLOTS)]
+    ms_refs = [session.run(ServeRequest(prompt=p,
+                                        max_new_tokens=ms_tokens)).tokens
+               for p in ms_prompts]
+    _schedule(session, ms_prompts, ms_tokens, GATE_SLOTS, True,
+              horizon=DECODE_HORIZON)          # warmup: lowers the capture
+    _, st_p = _schedule(session, ms_prompts, 1, GATE_SLOTS, True)
+    res_1, st_1 = _schedule(session, ms_prompts, ms_tokens, GATE_SLOTS, True)
+    res_n, st_n = _schedule(session, ms_prompts, ms_tokens, GATE_SLOTS, True,
+                            horizon=DECODE_HORIZON)
+    ms_parity = True
+    for r, ref in zip(res_1, ms_refs):
+        np.testing.assert_array_equal(r.tokens, ref)
+    for r, ref in zip(res_n, ms_refs):
+        np.testing.assert_array_equal(r.tokens, ref)
+
+    def _decode_per_tok(st):
+        return ((st.dispatches - st_p.dispatches)
+                / max(st.tokens - st_p.tokens, 1))
+
+    multistep = {
+        "mode": ms_mode,
+        "slots": GATE_SLOTS,
+        "horizon": DECODE_HORIZON,
+        "tokens_per_request": ms_tokens,
+        "disp_per_tok_single": round(st_1.dispatches_per_token, 2),
+        "disp_per_tok_multi": round(st_n.dispatches_per_token, 2),
+        "decode_disp_per_tok_single": round(_decode_per_tok(st_1), 2),
+        "decode_disp_per_tok_multi": round(_decode_per_tok(st_n), 2),
+        "multi_cycles": st_n.multi_cycles,
+        "multi_tokens": st_n.multi_tokens,
+        "parity": "exact" if ms_parity else "BROKEN",
+    }
+    print_table("Multi-step decode capture: one host submission per "
+                f"{DECODE_HORIZON} cycles ({ms_mode}, greedy parity "
+                "asserted)",
+                [multistep], ["mode", "slots", "horizon",
+                              "disp_per_tok_single", "disp_per_tok_multi",
+                              "decode_disp_per_tok_single",
+                              "decode_disp_per_tok_multi", "multi_cycles",
+                              "parity"])
+
     payload = {
         "quick": quick,
         "rows": rows,
@@ -172,9 +233,22 @@ def run_serving(quick: bool = False, tokens: int = 16,
         "gate_mode": modes[0],
         "gate_ratio_measured": gate_ratios.get(modes[0]),
         "gate_ratio_required": gate,
+        "multistep": multistep,
         "parity": "exact",
     }
     save_results("serving", payload)
+    if gate_multistep:
+        need = multistep["decode_disp_per_tok_single"] / DECODE_HORIZON * 1.2
+        got = multistep["decode_disp_per_tok_multi"]
+        ok = got <= need and ms_parity
+        print(f"  → multi-step gate [{ms_mode} @ horizon {DECODE_HORIZON}]: "
+              f"decode disp/tok {got:.2f} "
+              f"(required ≤ single-step/{DECODE_HORIZON} × 1.2 = "
+              f"{need:.2f}), parity exact — {'PASS' if ok else 'FAIL'}")
+        if not ok:
+            raise SystemExit(
+                f"multi-step capture gate failed: {got:.2f} > {need:.2f} "
+                f"or parity broken")
     if gate > 0:
         r = gate_ratios.get(modes[0], 0.0)
         ok = r >= gate
@@ -694,6 +768,10 @@ if __name__ == "__main__":
     ap.add_argument("--gate", type=float, default=0.0,
                     help="fail unless 4-slot continuous tok/s ≥ GATE × "
                          "1-slot sequential (CI regression gate)")
+    ap.add_argument("--gate-multistep", action="store_true",
+                    help="fail unless horizon-N decode dispatches/token ≤ "
+                         "single-step/N × 1.2 with byte-exact greedy "
+                         "parity (multi-step capture CI gate)")
     ap.add_argument("--prefix-reuse", action="store_true",
                     help="run the radix prefix-cache reuse benchmark "
                          "(BENCH_paging.json / BENCH_paging_graph.json)")
@@ -732,7 +810,8 @@ if __name__ == "__main__":
     elif args.prefix_reuse or args.gate_paging:
         run_prefix_reuse(quick=args.quick, gate=args.gate_paging,
                          backend_name=args.backend)
-    elif args.serving_only or args.gate > 0:
-        run_serving(quick=args.quick, gate=args.gate)
+    elif args.serving_only or args.gate > 0 or args.gate_multistep:
+        run_serving(quick=args.quick, gate=args.gate,
+                    gate_multistep=args.gate_multistep)
     else:
         run(quick=args.quick)

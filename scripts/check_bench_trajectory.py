@@ -53,6 +53,25 @@ def _serving_metrics(data: Dict) -> Dict[str, Metric]:
     return out
 
 
+def _multistep_metrics(data: Dict) -> Dict[str, Metric]:
+    # multi-step decode capture rides inside BENCH_serving.json under
+    # the "multistep" key (FILES maps the name); absent on baselines
+    # committed before the capture landed → nothing compared, no failure
+    ms = data.get("multistep")
+    if not ms:
+        return {}
+    key = f"{ms['mode']}@h{ms['horizon']}"
+    return {
+        # deterministic: super-step dispatch accounting is structural
+        f"decode_disp_per_tok_multi[{key}]": (
+            ms["decode_disp_per_tok_multi"], "lower", HARD),
+        f"disp_per_tok_multi[{key}]": (
+            ms["disp_per_tok_multi"], "lower", HARD),
+        f"parity_exact[{key}]": (
+            1.0 if ms.get("parity") == "exact" else 0.0, "higher", HARD),
+    }
+
+
 def _paging_metrics(data: Dict) -> Dict[str, Metric]:
     out: Dict[str, Metric] = {
         "prefill_disp_saved_per_warm_req": (
@@ -153,6 +172,7 @@ def _scenarios_metrics(data: Dict) -> Dict[str, Metric]:
 
 EXTRACTORS = {
     "serving": _serving_metrics,
+    "multistep": _multistep_metrics,
     "paging": _paging_metrics,
     "paging_graph": _paging_metrics,
     "spec": _spec_metrics,
@@ -161,9 +181,12 @@ EXTRACTORS = {
     "scenarios": _scenarios_metrics,
 }
 
+# benchmarks whose payload lives inside another benchmark's file
+FILES = {"multistep": "serving"}
+
 
 def _load_fresh(name: str) -> Optional[Dict]:
-    path = os.path.join(REPO, f"BENCH_{name}.json")
+    path = os.path.join(REPO, f"BENCH_{FILES.get(name, name)}.json")
     if not os.path.exists(path):
         return None
     with open(path) as f:
@@ -171,7 +194,8 @@ def _load_fresh(name: str) -> Optional[Dict]:
 
 
 def _load_baseline(name: str, ref: str) -> Optional[Dict]:
-    r = subprocess.run(["git", "show", f"{ref}:BENCH_{name}.json"],
+    r = subprocess.run(["git", "show",
+                        f"{ref}:BENCH_{FILES.get(name, name)}.json"],
                        cwd=REPO, capture_output=True, text=True)
     if r.returncode != 0:
         return None
@@ -228,8 +252,9 @@ def check_one(name: str, ref: str, threshold: float) -> Tuple[int, int]:
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("benchmarks", nargs="*",
-                    default=["serving", "paging", "paging_graph", "spec",
-                             "obs", "traffic", "scenarios"],
+                    default=["serving", "multistep", "paging",
+                             "paging_graph", "spec", "obs", "traffic",
+                             "scenarios"],
                     help="benchmark names (BENCH_<name>.json)")
     ap.add_argument("--baseline-ref", default="HEAD",
                     help="git ref holding the committed baselines")

@@ -65,6 +65,10 @@ def main() -> None:
                          "full + two spare prefix chains)")
     ap.add_argument("--speculative", default=None,
                     help="paged only: draft/verify decoding ('ngram')")
+    ap.add_argument("--decode-horizon", type=int, default=1,
+                    help="multi-step decode capture: submit up to N decode "
+                         "cycles as ONE host super-step (graph backends, "
+                         "greedy token readback; 1 = per-cycle path)")
     ap.add_argument("--out", default=None, help="write JSON rows here")
     ap.add_argument("--trace-out", default=None,
                     help="capture a repro.obs dispatch trace of the "
@@ -79,7 +83,8 @@ def main() -> None:
     from repro.configs.bench import BENCH_MODELS
     from repro.models import build_model
     from repro.obs import MetricsRegistry, Tracer, write_metrics, write_trace
-    from repro.serving import (InferenceSession, SamplerConfig, Scheduler,
+    from repro.serving import (CapabilityError, InferenceSession,
+                               SamplerConfig, Scheduler, SchedulerConfig,
                                ServeRequest, available_backends,
                                create_backend)
 
@@ -121,28 +126,32 @@ def main() -> None:
         caps = backend.capabilities
         if args.num_slots > 0:
             # fail loudly, naming the missing capability — a silently
-            # skipped scheduler run is how bad flag combos hide
-            if args.kv_layout == "paged" and not caps.paged_kv:
-                raise SystemExit(
-                    f"--kv-layout paged: backend {mode!r} for family "
-                    f"{cfg.family!r} has capabilities.paged_kv=False "
-                    f"(state_kind={caps.state_kind!r}); use --kv-layout "
-                    "dense")
-            if args.speculative and not caps.speculative:
-                raise SystemExit(
-                    f"--speculative: backend {mode!r} for family "
-                    f"{cfg.family!r} has capabilities.speculative=False "
-                    f"(state_kind={caps.state_kind!r}); drop --speculative")
+            # skipped scheduler run is how bad flag combos hide.  The
+            # uniform capabilities.require() error already names the
+            # backend, the feature, and state_kind; wrap it in a
+            # SystemExit carrying the offending flag.
+            try:
+                if args.kv_layout == "paged":
+                    caps.require("paged_kv", hint="use --kv-layout dense")
+                if args.speculative:
+                    caps.require("speculative", hint="drop --speculative")
+                if args.decode_horizon > 1:
+                    caps.require("decode_multi",
+                                 hint="drop --decode-horizon")
+            except CapabilityError as e:
+                raise SystemExit(f"family {cfg.family!r}: {e}") from e
             n_req = args.requests or 2 * args.num_slots
-            sched = Scheduler(session, num_slots=args.num_slots,
-                              continuous=args.continuous,
-                              kv_layout=args.kv_layout,
-                              prefill_chunk=args.prefill_chunk,
-                              prefix_cache=args.prefix_cache,
-                              block_size=args.block_size,
-                              num_blocks=args.num_blocks,
-                              speculative=args.speculative,
-                              tracer=tracer, metrics=metrics)
+            sched = Scheduler(session, config=SchedulerConfig(
+                num_slots=args.num_slots,
+                continuous=args.continuous,
+                kv_layout=args.kv_layout,
+                prefill_chunk=args.prefill_chunk,
+                prefix_cache=args.prefix_cache,
+                block_size=args.block_size,
+                num_blocks=args.num_blocks,
+                speculative=args.speculative,
+                decode_horizon=args.decode_horizon,
+                tracer=tracer, metrics=metrics))
             for i in range(n_req):
                 p = rng.integers(0, cfg.vocab_size,
                                  size=(1, args.prompt_len)).astype(np.int32)

@@ -1,28 +1,30 @@
 """Serving layer: the ``ExecutionBackend`` protocol, the production
 session API, and the back-compat ``GenerationEngine`` shim."""
-from repro.serving.backends import (BackendCapabilities, DispatchStats,
-                                    ExecutionBackend, StepOutput,
+from repro.serving.backends import (BackendCapabilities, CapabilityError,
+                                    DispatchStats, ExecutionBackend,
+                                    MultiStepOutput, StepOutput,
                                     available_backends, create_backend,
                                     get_backend, register_backend)
-from repro.serving.engine import GenerationEngine, GenerationResult
+from repro.serving._compat import GenerationEngine, GenerationResult
 from repro.serving.paging import BlockPool, PagedKVCache, RadixPrefixCache
 from repro.serving.statecache import (RecurrentStateCache, SlotKVCache,
                                       StateCache)
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.session import (BenchmarkReport, InferenceSession,
-                                   Scheduler, SchedulerStats, ServeRequest,
-                                   ServeResult)
+                                   Scheduler, SchedulerConfig, SchedulerStats,
+                                   ServeRequest, ServeResult)
 from repro.serving.spec import (Drafter, ModelDrafter, NgramDrafter,
                                 SpeculativeConfig)
 from repro.serving.traffic import (PoissonArrivals, ReplayArrivals,
                                    TrafficRequest, synthesize_workload)
 
 __all__ = [
-    "BackendCapabilities", "DispatchStats", "ExecutionBackend", "StepOutput",
+    "BackendCapabilities", "CapabilityError", "DispatchStats",
+    "ExecutionBackend", "MultiStepOutput", "StepOutput",
     "available_backends", "create_backend", "get_backend", "register_backend",
     "GenerationEngine", "GenerationResult", "SamplerConfig", "sample",
-    "BenchmarkReport", "InferenceSession", "Scheduler", "SchedulerStats",
-    "ServeRequest", "ServeResult",
+    "BenchmarkReport", "InferenceSession", "Scheduler", "SchedulerConfig",
+    "SchedulerStats", "ServeRequest", "ServeResult",
     "StateCache", "SlotKVCache", "RecurrentStateCache",
     "BlockPool", "PagedKVCache", "RadixPrefixCache",
     "Drafter", "ModelDrafter", "NgramDrafter", "SpeculativeConfig",

@@ -3,8 +3,9 @@ protocol.  Importing this package registers the built-in backends:
 ``F0``–``F4`` and ``FULL`` (dispatch graphs), ``model`` (jitted scan
 path), ``ondevice`` (whole generation loop in one dispatch), ``dist``
 (pipeline-parallel prefill/decode over a ``("stage",)`` mesh)."""
-from repro.serving.backends.base import (BackendCapabilities, DispatchStats,
-                                         ExecutionBackend, State, StepOutput,
+from repro.serving.backends.base import (BackendCapabilities, CapabilityError,
+                                         DispatchStats, ExecutionBackend,
+                                         MultiStepOutput, State, StepOutput,
                                          available_backends, create_backend,
                                          get_backend, register_backend)
 from repro.serving.backends.dist import DistBackend
@@ -13,8 +14,9 @@ from repro.serving.backends.model import ModelBackend
 from repro.serving.backends.ondevice import OnDeviceBackend
 
 __all__ = [
-    "BackendCapabilities", "DispatchStats", "ExecutionBackend", "State",
-    "StepOutput", "available_backends", "create_backend", "get_backend",
+    "BackendCapabilities", "CapabilityError", "DispatchStats",
+    "ExecutionBackend", "MultiStepOutput", "State", "StepOutput",
+    "available_backends", "create_backend", "get_backend",
     "register_backend", "DistBackend", "GRAPH_MODES", "GraphBackend",
     "ModelBackend", "OnDeviceBackend",
 ]

@@ -38,6 +38,21 @@ State = Dict[str, Any]
 BatchState = Dict[str, Any]     # opaque slot-pool state (continuous batching)
 
 
+def device_snapshot(a: np.ndarray) -> jax.Array:
+    """Hand mutable host-side metadata (slot positions, block tables) to
+    the device WITHOUT aliasing the live buffer.
+
+    XLA:CPU zero-copy-aliases 64-byte-aligned numpy inputs into the
+    runtime under immutable-buffer semantics, so passing e.g.
+    ``kvp.pos`` straight into an asynchronously executing dispatch and
+    then advancing it in place (``pos[slots] += 1``) is a data race —
+    whether it bites depends on per-allocation alignment luck, which is
+    exactly the kind of once-per-process parity flake it produces.  A
+    fresh copy may be zero-copy-aliased too, but nothing ever writes it.
+    """
+    return jnp.asarray(np.array(a, copy=True))
+
+
 class PagedAdmit(NamedTuple):
     """Result of admitting a request into a paged slot: how much of the
     prompt the radix prefix cache satisfied (zero prefill dispatches for
@@ -56,6 +71,45 @@ class StepOutput(NamedTuple):
     """
     logits: jax.Array
     next_token: Optional[jax.Array] = None
+
+
+class MultiStepOutput(NamedTuple):
+    """One ``decode_multi`` super-step's device-side outputs.
+
+    ``tokens`` — (num_slots, horizon) int32, column i = the token row s
+                 sampled at cycle i; still on device (nothing read back —
+                 the scheduler's async double-buffer owns the sync).
+    ``valid``  — (num_slots, horizon) bool; False once row s emitted a
+                 stop token at an earlier column (the stop token itself is
+                 valid), so the host reconciles mid-horizon stops exactly.
+    ``steps``  — scalar int32, cycles actually executed before the
+                 on-device all-rows-done early exit (≤ horizon).
+    """
+    tokens: jax.Array
+    valid: jax.Array
+    steps: jax.Array
+
+
+class CapabilityError(NotImplementedError, ValueError):
+    """A backend was asked for a feature its ``capabilities`` do not
+    advertise.  Subclasses BOTH ``NotImplementedError`` (the historical
+    backend-method contract) and ``ValueError`` (the historical scheduler
+    contract) so every pre-existing call site keeps its exception type.
+    """
+
+
+#: uniform phrasing for ``BackendCapabilities.require`` errors — one place
+#: to name what each missing feature means
+_FEATURE_PHRASES = {
+    "decode_batch": "no batched decode",
+    "decode_multi": "no multi-step decode capture",
+    "paged_kv": "no paged-KV support",
+    "speculative": "no speculative verify",
+    "preemption": "no preemption support",
+    "device_argmax": "no in-graph argmax",
+    "on_device_loop": "no on-device generation loop",
+    "phase_timeline": "no host-side phase timeline",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +141,34 @@ class BackendCapabilities:
                                     # Mamba2 / RG-LRU; nothing to page, so
                                     # paged_kv/speculative/preemption are
                                     # honestly False for these families)
+    decode_multi: bool = False      # decode_multi(): N decode cycles
+                                    # captured into ONE host submission
+                                    # (on-device sampling + stop detection;
+                                    # graph backends — the host-sync-free
+                                    # super-step)
+
+    def require(self, feature: str, *, hint: str = "") -> None:
+        """THE capability gate: raise one uniform ``CapabilityError``
+        unless the boolean capability ``feature`` is advertised.
+
+        The error names the backend, the feature (as the literal
+        ``capabilities.<feature>=False``), and ``state_kind`` — replacing
+        the ad-hoc per-call-site checks that accreted one message each.
+        ``hint`` appends a caller-specific remedy.
+        """
+        if getattr(self, feature, False):
+            return
+        phrase = _FEATURE_PHRASES.get(feature, f"no {feature!r} support")
+        why = f"state_kind={self.state_kind!r}"
+        if self.state_kind == "recurrent" and feature in (
+                "paged_kv", "speculative", "preemption"):
+            why += ("; constant-size recurrent slots have nothing to "
+                    "page")
+        msg = (f"backend {self.name!r} has {phrase}: "
+               f"capabilities.{feature}=False ({why})")
+        if hint:
+            msg += f" — {hint}"
+        raise CapabilityError(msg)
 
 
 @dataclasses.dataclass
@@ -156,8 +238,7 @@ class ExecutionBackend(abc.ABC):
                           n_new: int, sampler, rng) -> jax.Array:
         """Run the remaining loop in one dispatch → (B, n_new) tokens.
         Only for backends with ``capabilities.on_device_loop``."""
-        raise NotImplementedError(
-            f"{self.capabilities.name!r} has no on-device generation loop")
+        self.capabilities.require("on_device_loop")
 
     # -- continuous batching (slot pool) -----------------------------------
     # The scheduler drives these four.  ``bstate`` is an opaque batched
@@ -231,6 +312,30 @@ class ExecutionBackend(abc.ABC):
             nxt = None
         return bstate, StepOutput(logits, nxt)
 
+    def decode_multi(self, bstate: BatchState, tokens,
+                     slots: Sequence[int], *, horizon: int,
+                     stop_table=None
+                     ) -> Tuple[BatchState, MultiStepOutput]:
+        """Up to ``horizon`` decode cycles in ONE host submission.
+
+        The multi-step seam (``capabilities.decode_multi``): the backend
+        replays its captured decode stream ``horizon`` times on device —
+        in-graph sampling feeds each cycle's token into the next, per-row
+        positions advance on device, and ``stop_table`` (row s = slot s's
+        stop-token ids, -1 padded; ``None`` ⇒ no stops) drives on-device
+        stop detection with an all-rows-done early exit.  ``tokens`` is
+        (num_slots, 1) int32 exactly as for ``decode_batch``.
+
+        Contract: the backend advances every slot's position by the FULL
+        ``horizon`` (a slot that stops mid-horizon keeps writing into
+        blocks it owns — overshoot K/V past the realized length is never
+        republished, because release caps at the realized sequence), and
+        records the captured stream's dispatch count ONCE per super-step
+        (op ``decode_multi``), so dispatches/token drops ~``horizon``×.
+        Returns a slot-indexed ``MultiStepOutput``, nothing read back.
+        """
+        self.capabilities.require("decode_multi")
+
     # -- paged KV (block pool + radix prefix cache + chunked prefill) ------
     # Backends advertising ``capabilities.paged_kv`` replace the dense
     # slot pool with fixed-size KV blocks: admission is a radix-cache match
@@ -267,8 +372,7 @@ class ExecutionBackend(abc.ABC):
             span may overhang ``max_len`` by the draft width before a
             rejection rewinds it (``Scheduler`` passes ``k + 1``).
         """
-        raise NotImplementedError(
-            f"{self.capabilities.name!r} has no paged-KV support")
+        self.capabilities.require("paged_kv")
 
     def _make_paged_state(self, num_slots: int, *, block_size: int,
                           prefill_chunk: Optional[int],
@@ -312,8 +416,9 @@ class ExecutionBackend(abc.ABC):
         versus the prompt length, i.e. how much prefill is skipped.
         """
         if "paged" not in bstate:
-            raise NotImplementedError(
-                f"{self.capabilities.name!r} has no paged-KV support")
+            self.capabilities.require("paged_kv")
+            raise ValueError("admit_paged needs the paged batch state "
+                             "from alloc_slots_paged")
         pg = bstate["paged"]
         radix = bstate["radix"]
         toks = np.asarray(prompt, np.int32).reshape(-1)
@@ -344,8 +449,7 @@ class ExecutionBackend(abc.ABC):
         else ``None`` — the scheduler interleaves these calls with
         ``decode_batch`` cycles for chunked prefill.
         """
-        raise NotImplementedError(
-            f"{self.capabilities.name!r} has no paged-KV support")
+        self.capabilities.require("paged_kv")
 
     def _prefill_chunk_with(self, bstate: BatchState, slot: int, run_extend
                             ) -> Optional[StepOutput]:
@@ -387,7 +491,7 @@ class ExecutionBackend(abc.ABC):
             t0 = time.perf_counter()
             ak, av, logits, nxt = fn(
                 self.params, pg.pool.arena_k, pg.pool.arena_v,
-                jnp.asarray(pg.table[slot:slot + 1]), jnp.int32(cur),
+                device_snapshot(pg.table[slot:slot + 1]), jnp.int32(cur),
                 jnp.int32(valid), jnp.asarray(buf))
             enq = time.perf_counter() - t0
             self._record(RunStats(wall_s=enq, dispatches=1 + copies,
@@ -412,8 +516,7 @@ class ExecutionBackend(abc.ABC):
         K/V for ALL C positions but does NOT advance ``pos`` — the caller
         commits or rolls back through the slot-fork API.
         """
-        raise NotImplementedError(
-            f"{self.capabilities.name!r} has no speculative verify")
+        self.capabilities.require("speculative")
 
     def swap_out_paged(self, bstate: BatchState, slot: int) -> Dict[str, Any]:
         """Preempt ``slot``: move its block chain off the arena, free the
@@ -436,9 +539,10 @@ class ExecutionBackend(abc.ABC):
         it: restore exactly once, or discard via
         ``bstate["paged"].drop_swap(record["chain"])``.
         """
-        if "paged" not in bstate or not self.capabilities.preemption:
-            raise NotImplementedError(
-                f"{self.capabilities.name!r} has no preemption support")
+        self.capabilities.require("preemption")
+        if "paged" not in bstate:
+            raise ValueError("swap_out_paged needs the paged batch state "
+                             "from alloc_slots_paged")
         pg = bstate["paged"]
         chain = pg.swap_out(slot)
         self._record(RunStats(wall_s=0.0, dispatches=0, shape_ops=0,

@@ -48,7 +48,7 @@ from repro.models import transformer
 from repro.models.transformer import CHUNKED_ATTENTION_MIN_SEQ
 from repro.serving.backends.base import (BackendCapabilities, BatchState,
                                          ExecutionBackend, State, StepOutput,
-                                         register_backend)
+                                         device_snapshot, register_backend)
 
 
 def _auto_stages(num_layers: int, n_devices: int) -> int:
@@ -388,7 +388,7 @@ class DistBackend(ExecutionBackend):
         t0 = time.perf_counter()
         ak, av, logits, nxt = self._jit_decode_paged(
             self.params, pg.pool.arena_k, pg.pool.arena_v,
-            jnp.asarray(pg.table), jnp.asarray(pg.pos),
+            device_snapshot(pg.table), device_snapshot(pg.pos),
             jnp.asarray(tokens, jnp.int32))
         enq = time.perf_counter() - t0
         self._record(RunStats(wall_s=enq, dispatches=1 + copies, shape_ops=0,

@@ -30,13 +30,15 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.engine import DispatchEngine, FullGraphEngine, RunStats
+from repro.core.engine import (DispatchEngine, FullGraphEngine,
+                               MultiStepEngine, RunStats)
 from repro.core.graphs import (LEVELS, build_decode_graph, build_extend_graph,
                                build_prefill_graph)
-from repro.serving import kvcache as kv
-from repro.serving.kvcache import SlotKVCache
+from repro.serving.statecache import (SlotKVCache, empty_graph_cache,
+                                      load_prefix)
 from repro.serving.backends.base import (BackendCapabilities, BatchState,
-                                         ExecutionBackend, State, StepOutput,
+                                         ExecutionBackend, MultiStepOutput,
+                                         State, StepOutput, device_snapshot,
                                          register_backend)
 
 GRAPH_MODES = tuple(LEVELS) + ("FULL",)
@@ -68,6 +70,10 @@ class GraphBackend(ExecutionBackend):
         # so they are shared across schedulers with the same pool geometry
         self._paged_engines: Dict[Any, Any] = {}     # decode, keyed on
         self._paged_extend_engines: Dict[Any, Any] = {}   # pool geometry
+        # multi-step super-step engines, keyed on (decode graph, horizon);
+        # dense and paged share the cache because the graph identity
+        # already encodes num_slots and pool geometry
+        self._multi_engines: Dict[Any, Any] = {}
         batchable = self.cfg.family in ("dense", "moe")
         self.capabilities = BackendCapabilities(
             name=mode,
@@ -76,6 +82,7 @@ class GraphBackend(ExecutionBackend):
             phase_timeline=True,
             decode_batch=batchable,
             paged_kv=batchable,
+            decode_multi=batchable,
         )
 
     # ------------------------------------------------------------------
@@ -99,8 +106,8 @@ class GraphBackend(ExecutionBackend):
         eng = self._prefill_engine(plen)
         out, rs = eng.run({"tokens": tokens}, record_timeline=True)
         self._record(rs, op="prefill")
-        cache = kv.load_prefix(
-            kv.empty_graph_cache(self.cfg, b, self.max_len), out,
+        cache = load_prefix(
+            empty_graph_cache(self.cfg, b, self.max_len), out,
             self.cfg.num_layers)
         state: State = {"cache": cache, "pos": plen}
         return state, StepOutput(out["logits"], out["next_token"])
@@ -168,7 +175,7 @@ class GraphBackend(ExecutionBackend):
         eng = self._batched_engine(bstate["num_slots"])
         inputs = dict(kvp.tree)
         inputs["tokens"] = jnp.asarray(tokens, jnp.int32)
-        inputs["pos"] = jnp.asarray(kvp.pos)
+        inputs["pos"] = device_snapshot(kvp.pos)
         out, rs = eng.run(inputs, record_timeline=True)
         self._record(rs, op="decode_batch")
         kvp.tree = {f"{c}_cache_{l}": out[f"{c}_cache_{l}"]
@@ -182,9 +189,7 @@ class GraphBackend(ExecutionBackend):
                           num_blocks: Optional[int] = None,
                           prefix_cache: bool = True,
                           spec_slack: int = 0) -> BatchState:
-        if not self.capabilities.paged_kv:
-            raise NotImplementedError(
-                f"{self.capabilities.name!r} has no paged-KV support")
+        self.capabilities.require("paged_kv")
         bstate = self._make_paged_state(num_slots, block_size=block_size,
                                         prefill_chunk=prefill_chunk,
                                         num_blocks=num_blocks,
@@ -242,7 +247,7 @@ class GraphBackend(ExecutionBackend):
         inputs["tokens"] = jnp.asarray(buf)
         inputs["pos0"] = jnp.int32(cur)
         inputs["valid"] = jnp.int32(valid)
-        inputs["block_table"] = jnp.asarray(pg.table[slot:slot + 1])
+        inputs["block_table"] = device_snapshot(pg.table[slot:slot + 1])
         out, rs = eng.run(inputs, record_timeline=True)
         self._record(rs, op="prefill_chunk")
         pg.pool.set_tree(out)
@@ -269,10 +274,79 @@ class GraphBackend(ExecutionBackend):
         eng = bstate["decode_eng"]
         inputs = dict(pg.pool.tree)
         inputs["tokens"] = jnp.asarray(tokens, jnp.int32)
-        inputs["pos"] = jnp.asarray(pg.pos)
-        inputs["block_table"] = jnp.asarray(pg.table)
+        inputs["pos"] = device_snapshot(pg.pos)
+        inputs["block_table"] = device_snapshot(pg.table)
         out, rs = eng.run(inputs, record_timeline=True)
         self._record(rs, op="decode_batch")
         pg.pool.set_tree(out)
         pg.advance(slots)
         return bstate, StepOutput(out["logits"], out["next_token"])
+
+    # -- multi-step decode capture (the host-sync-free super-step) --------
+    def _multi_engine(self, graph, horizon: int) -> MultiStepEngine:
+        """One captured super-step per (decode graph, horizon) — the graph
+        identity already encodes num_slots / pool geometry, so dense and
+        paged engines share this cache.  The recorded stream is the
+        single-cycle dispatch count (1 for FULL): the host submits that
+        stream once per horizon."""
+        key = (id(graph), horizon)
+        eng = self._multi_engines.get(key)
+        if eng is None:
+            eng = MultiStepEngine(
+                graph, horizon=horizon,
+                stream_dispatches=1 if self._full
+                else graph.num_dispatches())
+            self._multi_engines[key] = eng
+        return eng
+
+    def decode_multi(self, bstate: BatchState, tokens,
+                     slots: Sequence[int], *, horizon: int,
+                     stop_table=None
+                     ) -> Tuple[BatchState, MultiStepOutput]:
+        """Up to ``horizon`` decode cycles in ONE host submission: the
+        captured per-op stream (or the FULL executable) replayed inside a
+        device-side loop with in-graph argmax feedback and on-device stop
+        detection.  Positions advance by the full horizon — a slot that
+        stops early keeps writing into rows/blocks it owns, and release
+        caps the published KV at the realized sequence."""
+        self.capabilities.require("decode_multi")
+        if "paged" in bstate:
+            return self._decode_multi_paged(bstate, tokens, slots,
+                                            horizon=horizon,
+                                            stop_table=stop_table)
+        kvp: SlotKVCache = bstate["kv"]
+        eng = self._multi_engine(
+            self._batched_engine(bstate["num_slots"]).graph, horizon)
+        caches, toks, valid, steps, rs = eng.run(
+            kvp.tree, tokens, device_snapshot(kvp.pos),
+            stop_table=stop_table)
+        self._record(rs, op="decode_multi")
+        kvp.tree = dict(caches)
+        kvp.pos[list(slots)] += horizon
+        return bstate, MultiStepOutput(toks, valid, steps)
+
+    def _decode_multi_paged(self, bstate: BatchState, tokens,
+                            slots: Sequence[int], *, horizon: int,
+                            stop_table=None
+                            ) -> Tuple[BatchState, MultiStepOutput]:
+        """The paged super-step: block tables are loop-invariant, so every
+        block the horizon can touch is claimed (fresh or COW-forked) up
+        front — the same accounting as ``horizon`` single steps, paid in
+        one host pass."""
+        pg = bstate["paged"]
+        copies = 0
+        for s in slots:
+            copies += pg.ensure_writable(s, int(pg.pos[s]),
+                                         int(pg.pos[s]) + horizon)
+        if copies:
+            self._record(RunStats(wall_s=0.0, dispatches=copies, shape_ops=0,
+                                  sync_mode="none"), op="cow_copy")
+        eng = self._multi_engine(bstate["decode_eng"].graph, horizon)
+        caches, toks, valid, steps, rs = eng.run(
+            pg.pool.tree, tokens, device_snapshot(pg.pos),
+            stop_table=stop_table,
+            static={"block_table": device_snapshot(pg.table)})
+        self._record(rs, op="decode_multi")
+        pg.pool.set_tree(caches)
+        pg.pos[list(slots)] += horizon
+        return bstate, MultiStepOutput(toks, valid, steps)

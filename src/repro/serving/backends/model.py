@@ -29,7 +29,7 @@ from repro.models import transformer
 from repro.serving.statecache import RecurrentStateCache, SlotKVCache
 from repro.serving.backends.base import (BackendCapabilities, BatchState,
                                          ExecutionBackend, State, StepOutput,
-                                         register_backend)
+                                         device_snapshot, register_backend)
 
 
 @register_backend("model")
@@ -172,7 +172,7 @@ class ModelBackend(ExecutionBackend):
         t0 = time.perf_counter()
         k, v, logits, nxt = self._jit_decode_rows(
             self.params, kv.tree["k"], kv.tree["v"],
-            jnp.asarray(kv.pos), jnp.asarray(tokens, jnp.int32))
+            device_snapshot(kv.pos), jnp.asarray(tokens, jnp.int32))
         enq = time.perf_counter() - t0
         self._record(RunStats(wall_s=enq, dispatches=1, shape_ops=0,
                               sync_mode="none", enqueue_s=enq),
@@ -189,7 +189,7 @@ class ModelBackend(ExecutionBackend):
         rs: RecurrentStateCache = bstate["rstate"]
         t0 = time.perf_counter()
         tree, logits, nxt = self._jit_decode_recurrent(
-            self.params, rs.tree, jnp.asarray(rs.pos),
+            self.params, rs.tree, device_snapshot(rs.pos),
             jnp.asarray(tokens, jnp.int32))
         enq = time.perf_counter() - t0
         self._record(RunStats(wall_s=enq, dispatches=1, shape_ops=0,
@@ -205,9 +205,7 @@ class ModelBackend(ExecutionBackend):
                           num_blocks: Optional[int] = None,
                           prefix_cache: bool = True,
                           spec_slack: int = 0) -> BatchState:
-        if not self.capabilities.paged_kv:
-            raise NotImplementedError(
-                f"{self.capabilities.name!r} has no paged-KV support")
+        self.capabilities.require("paged_kv")
         return self._make_paged_state(num_slots, block_size=block_size,
                                       prefill_chunk=prefill_chunk,
                                       num_blocks=num_blocks,
@@ -229,7 +227,7 @@ class ModelBackend(ExecutionBackend):
         t0 = time.perf_counter()
         ak, av, logits, nxt = self._jit_decode_paged(
             self.params, pg.pool.arena_k, pg.pool.arena_v,
-            jnp.asarray(pg.table), jnp.asarray(pg.pos),
+            device_snapshot(pg.table), device_snapshot(pg.pos),
             jnp.asarray(tokens, jnp.int32))
         enq = time.perf_counter() - t0
         self._record(RunStats(wall_s=enq, dispatches=1 + copies, shape_ops=0,
@@ -246,9 +244,7 @@ class ModelBackend(ExecutionBackend):
         verify).  Writes K/V for the full span but does NOT advance
         ``pos`` — the scheduler commits the accepted prefix through the
         slot-fork API (rollback = pos rewind, zero KV copies)."""
-        if not self.capabilities.speculative:
-            raise NotImplementedError(
-                f"{self.capabilities.name!r} has no speculative verify")
+        self.capabilities.require("speculative")
         pg = bstate["paged"]
         copies = 0
         for s, span in zip(slots, spans):
@@ -257,7 +253,7 @@ class ModelBackend(ExecutionBackend):
         t0 = time.perf_counter()
         ak, av, logits, nxt = self._jit_verify_paged(
             self.params, pg.pool.arena_k, pg.pool.arena_v,
-            jnp.asarray(pg.table), jnp.asarray(pg.pos),
+            device_snapshot(pg.table), device_snapshot(pg.pos),
             jnp.asarray(tokens, jnp.int32))
         enq = time.perf_counter() - t0
         self._record(RunStats(wall_s=enq, dispatches=1 + copies, shape_ops=0,

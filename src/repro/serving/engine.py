@@ -1,92 +1,9 @@
-"""Back-compat generation engine — now a thin shim over the backend
-registry + ``InferenceSession``.
-
-New code should use the first-class API::
-
-    from repro.serving import InferenceSession, ServeRequest, create_backend
-    backend = create_backend("F3", model, params, batch=1, max_len=128)
-    result = InferenceSession(backend).run(ServeRequest(prompt, 32))
-
-``GenerationEngine`` keeps the historical constructor and greedy
-``generate``/``benchmark`` surface for existing callers; every mode
-(``F0``…``F4``, ``FULL``, ``model``, ``ondevice``) routes through the
-``ExecutionBackend`` registry, so dispatch accounting is uniform.
+"""DEPRECATED compat shim — ``GenerationEngine`` / ``GenerationResult``
+moved to ``repro.serving._compat``; use ``InferenceSession`` +
+``create_backend`` for new code.  This module remains only so historical
+imports keep resolving.
 """
-from __future__ import annotations
-
-import dataclasses
-from typing import Any, Dict
-
-import numpy as np
-
-from repro.serving.backends import GRAPH_MODES, create_backend
-from repro.serving.session import (BenchmarkReport, InferenceSession,
-                                   ServeRequest)
-
-__all__ = ["GenerationEngine", "GenerationResult", "BenchmarkReport",
-           "GRAPH_MODES"]
-
-
-@dataclasses.dataclass
-class GenerationResult:
-    tokens: np.ndarray          # (B, n_new)
-    ttft_s: float
-    total_s: float
-    n_new: int
-    dispatches_per_token: int   # capability estimate (0 for ondevice)
-    dispatches: int = 0         # measured dispatch_stats() delta for the run
-
-    @property
-    def tok_per_s(self) -> float:
-        return self.n_new / self.total_s
-
-
-class GenerationEngine:
-    """One (model, params, mode) serving configuration (compat shim)."""
-
-    def __init__(self, model, params: Dict[str, Any], *, mode: str,
-                 batch: int = 1, max_len: int = 128,
-                 readback: str = "token") -> None:
-        self.model = model
-        self.cfg = model.cfg
-        self.params = params
-        self.mode = mode
-        self.batch = batch
-        self.max_len = max_len
-        self.readback = readback
-        self.backend = create_backend(mode, model, params, batch=batch,
-                                      max_len=max_len)
-        self.session = InferenceSession(self.backend)
-
-    @property
-    def dispatches_per_token(self) -> int:
-        """Delegates to the backend capability — a single accounting
-        source.  The engine used to snapshot this at construction, which
-        silently diverged when the backend's capabilities changed; now
-        the shim, the session, and the tracer all read the same field
-        and all MEASURED counts flow through ``dispatch_stats()``."""
-        return self.backend.capabilities.dispatches_per_token
-
-    def dispatch_stats(self):
-        return self.backend.dispatch_stats()
-
-    def reset_stats(self) -> None:
-        self.backend.reset_stats()
-
-    # ------------------------------------------------------------------
-    def generate(self, prompt: np.ndarray, n_new: int) -> GenerationResult:
-        prompt = np.atleast_2d(np.asarray(prompt, np.int32))
-        assert prompt.shape[0] == self.batch
-        d0 = self.backend.dispatch_stats().dispatches
-        r = self.session.run(ServeRequest(prompt=prompt, max_new_tokens=n_new,
-                                          readback=self.readback))
-        return GenerationResult(r.tokens, r.ttft_s, r.total_s, r.n_new,
-                                self.dispatches_per_token,
-                                self.backend.dispatch_stats().dispatches - d0)
-
-    # ------------------------------------------------------------------
-    def benchmark(self, prompt: np.ndarray, n_new: int, *, n_runs: int = 10,
-                  warmup: int = 3) -> BenchmarkReport:
-        """The paper's protocol: warmup to steady state, then timed runs."""
-        return self.session.benchmark(prompt, n_new, n_runs=n_runs,
-                                      warmup=warmup, readback=self.readback)
+from repro.serving._compat import (  # noqa: F401  (deprecated re-export)
+    GenerationEngine, GenerationResult)
+from repro.serving.backends import GRAPH_MODES  # noqa: F401
+from repro.serving.session import BenchmarkReport  # noqa: F401

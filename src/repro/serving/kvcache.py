@@ -1,51 +1,8 @@
-"""KV-cache utilities bridging the model cache layout (stacked layer axis)
-and the dispatch-graph layout (one named input per layer).
-
-The slot-major ``SlotKVCache`` pool now lives behind the ``StateCache``
-protocol in ``repro.serving.statecache`` (alongside the paged and
-recurrent cache classes); it is re-exported here so existing imports
-keep working.
+"""DEPRECATED compat shim — everything here moved to
+``repro.serving.statecache`` (the ``StateCache`` protocol package).
+Import ``SlotKVCache`` / ``empty_graph_cache`` / the layout bridges from
+there; this module remains only so historical imports keep resolving.
 """
-from __future__ import annotations
-
-from typing import Any, Dict
-
-import jax
-import jax.numpy as jnp
-
-from repro.serving.statecache.slotkv import (  # noqa: F401  (compat re-export)
-    SlotKVCache,
-    empty_graph_cache,
-)
-
-
-def load_prefix(graph_cache: Dict[str, jax.Array], prefill_out: Dict[str, Any],
-                num_layers: int) -> Dict[str, jax.Array]:
-    """Write prefill K/V prefixes (B, prompt, KV, hd) into max_len caches."""
-    out = dict(graph_cache)
-    for i in range(num_layers):
-        kp, vp = prefill_out[f"k_prefix_{i}"], prefill_out[f"v_prefix_{i}"]
-        out[f"k_cache_{i}"] = jax.lax.dynamic_update_slice(
-            out[f"k_cache_{i}"], kp.astype(out[f"k_cache_{i}"].dtype), (0, 0, 0, 0))
-        out[f"v_cache_{i}"] = jax.lax.dynamic_update_slice(
-            out[f"v_cache_{i}"], vp.astype(out[f"v_cache_{i}"].dtype), (0, 0, 0, 0))
-    return out
-
-
-def stacked_to_graph(cache: Dict[str, jax.Array], num_layers: int
-                     ) -> Dict[str, jax.Array]:
-    """Model cache {"k": (L,B,S,KV,hd), ...} → per-layer graph inputs."""
-    out: Dict[str, jax.Array] = {}
-    for i in range(num_layers):
-        out[f"k_cache_{i}"] = cache["k"][i]
-        out[f"v_cache_{i}"] = cache["v"][i]
-    return out
-
-
-def graph_to_stacked(inputs: Dict[str, jax.Array], num_layers: int,
-                     pos) -> Dict[str, jax.Array]:
-    return {
-        "k": jnp.stack([inputs[f"k_cache_{i}"] for i in range(num_layers)]),
-        "v": jnp.stack([inputs[f"v_cache_{i}"] for i in range(num_layers)]),
-        "pos": jnp.asarray(pos, jnp.int32),
-    }
+from repro.serving.statecache.slotkv import (  # noqa: F401  (deprecated re-export)
+    SlotKVCache, empty_graph_cache, graph_to_stacked, load_prefix,
+    stacked_to_graph)

@@ -316,6 +316,12 @@ class SchedulerStats:
     sync_readback_s: float = 0.0     # device_get time on the blocking path
     overlap_readback_s: float = 0.0  # device_get time overlapped with the
                                      # next cycle's device work
+    # multi-step decode capture (decode_horizon > 1, graph backends)
+    decode_horizon: int = 1          # configured super-step horizon
+    multi_cycles: int = 0            # super-steps issued (each covers up
+                                     # to ``decode_horizon`` decode cycles
+                                     # in ONE host submission)
+    multi_tokens: int = 0            # tokens emitted by super-steps
     # KV memory utilization (satellite: dense vs paged in one table)
     kv_bytes_allocated: int = 0
     kv_bytes_live_peak: int = 0
@@ -479,6 +485,9 @@ class SchedulerStats:
             "cow_copies": self.cow_copies,
             "evictions": self.evictions,
             "overlap_cycles": self.overlap_cycles,
+            "decode_horizon": self.decode_horizon,
+            "multi_cycles": self.multi_cycles,
+            "multi_tokens": self.multi_tokens,
             "sync_readback_ms": round(1e3 * self.sync_readback_s, 2),
             "overlap_readback_ms": round(1e3 * self.overlap_readback_s, 2),
             "kv_bytes_allocated": self.kv_bytes_allocated,
@@ -503,6 +512,106 @@ class SchedulerStats:
             "slo_attainment": round(self.slo_attainment, 3),
             "goodput_tok_s": round(self.goodput_tok_per_s, 2),
         }
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    """Every :class:`Scheduler` policy knob in ONE validated dataclass.
+
+    The scheduler's constructor accreted a kwarg per feature PR; this is
+    the consolidated surface.  Build one and pass
+    ``Scheduler(session, config=cfg)`` — or keep calling with the
+    individual kwargs, which now merely populate a config for you.
+
+    Fields:
+      num_slots: concurrent request slots — the batch width decode
+        cycles amortize dispatch overhead over.
+      continuous: ``True`` batches every cycle into ONE
+        ``decode_batch`` dispatch; ``False`` is the sequential
+        per-slot-dispatch baseline the amortization curve starts at.
+      kv_layout: ``"dense"`` (slot-major KV pool) or ``"paged"``
+        (block pool + radix prefix cache, see
+        :mod:`repro.serving.paging`).
+      prefill_chunk: paged only — prompt tokens prefilled per cycle,
+        interleaved with decode so long admissions never stall
+        running slots; ``None`` prefills whole prompts at once.
+      prefix_cache: paged only — radix-cache prompt prefixes so
+        shared spans skip prefill (see ``SchedulerStats.prefix_*``).
+      block_size: paged only — tokens per KV block (sharing/COW
+        granularity).
+      num_blocks: paged only — arena capacity in blocks; ``None``
+        sizes for worst-case occupancy plus prefix-cache slack.
+      async_readback: double-buffer device→host token readback in
+        steady state (identical token streams; savings in
+        ``SchedulerStats.overlap_*``).
+      speculative: draft/verify decoding — ``"ngram"``, a
+        :class:`~repro.serving.spec.SpeculativeConfig`, or a
+        :class:`~repro.serving.spec.Drafter`; paged layout only.
+        Normalized to a ``SpeculativeConfig`` (or ``None``) on
+        construction.
+      preemption: ``"off"`` | ``"swap"`` | ``"recompute"`` |
+        ``"auto"`` — oversubscription policy (paged layout only; see
+        the :class:`Scheduler` docstring).  ``"swap"`` needs
+        ``capabilities.preemption``; ``"auto"`` degrades to
+        recompute when the backend cannot swap.
+      decode_horizon: multi-step decode capture — when the backend
+        advertises ``capabilities.decode_multi`` and every active
+        request is greedy token-readback with no stream callback, the
+        scheduler submits up to this many decode cycles as ONE
+        ``decode_multi`` super-step (on-device sampling + stop
+        detection), cutting host submissions per token by the same
+        factor.  ``1`` (default) keeps the per-cycle path; ineligible
+        mixes fall back to it automatically.
+      tracer: a :class:`repro.obs.Tracer` — scheduler/slot/paging
+        tracks plus the backend's dispatch lane feed one timeline.
+      metrics: a :class:`repro.obs.MetricsRegistry` — each ``run``
+        folds its stats in (``serving.*`` counters/histograms,
+        per-priority TTFT, SLO attainment); the traffic harness
+        sources its SLO numbers HERE, not from ad-hoc timers.
+    """
+    num_slots: int = 2
+    continuous: bool = True
+    kv_layout: str = "dense"
+    prefill_chunk: Optional[int] = None
+    prefix_cache: bool = True
+    block_size: int = 16
+    num_blocks: Optional[int] = None
+    async_readback: bool = True
+    speculative: Any = None
+    preemption: str = "off"
+    decode_horizon: int = 1
+    tracer: Optional[Tracer] = None
+    metrics: Optional[MetricsRegistry] = None
+
+    def __post_init__(self) -> None:
+        if self.num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        if self.kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {self.kv_layout!r}")
+        if self.kv_layout == "paged" and not self.continuous:
+            raise ValueError("paged KV requires the continuous scheduler")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if self.decode_horizon < 1:
+            raise ValueError("decode_horizon must be >= 1")
+        if self.preemption not in ("off", "swap", "recompute", "auto"):
+            raise ValueError(f"unknown preemption {self.preemption!r}")
+        if self.preemption != "off" and self.kv_layout != "paged":
+            raise ValueError(
+                "preemption requires kv_layout='paged' (victim state moves "
+                "as block chains; the dense pool has nothing to swap)")
+        if self.speculative is not None:
+            if self.kv_layout != "paged":
+                raise ValueError(
+                    "speculative decoding requires kv_layout='paged' (the "
+                    "COW block-fork rollback lives in the paging arena)")
+            if isinstance(self.speculative, (str, Drafter)):
+                self.speculative = SpeculativeConfig(drafter=self.speculative)
+            elif not isinstance(self.speculative, SpeculativeConfig):
+                raise ValueError(
+                    "speculative must be a drafter name, a Drafter, or a "
+                    f"SpeculativeConfig; got "
+                    f"{type(self.speculative).__name__}")
 
 
 class Scheduler:
@@ -553,6 +662,17 @@ class Scheduler:
     readback + Python bookkeeping overlap device work (the savings land in
     ``SchedulerStats.overlap_*``).  Token streams are identical either way.
 
+    ``decode_horizon > 1`` goes further on backends advertising
+    ``capabilities.decode_multi``: when every active slot is greedy
+    token-readback with no stream callback, the scheduler wraps up to N
+    decode cycles into ONE ``decode_multi`` super-step — on-device argmax
+    feeds each cycle's token into the next, an on-device stop table masks
+    rows past their stop token, and the host reads one ``(slots, N)``
+    token block back per submission, so dispatches per token drop by ~N×
+    with a byte-identical greedy stream.  Stop tokens are reconciled on
+    retire (nothing past a stop is ever emitted); non-greedy samplers,
+    logits readback, or streaming fall back to the per-cycle path.
+
     ``preemption`` (paged layout only) makes the scheduler survive
     oversubscription: admission is priority-ordered (FIFO within a
     priority), and when every slot is busy a strictly-higher-priority
@@ -575,91 +695,45 @@ class Scheduler:
     ``benchmarks/bench_traffic.py`` drives this path.
     """
 
-    def __init__(self, session: InferenceSession, num_slots: int = 2, *,
-                 continuous: bool = True, kv_layout: str = "dense",
-                 prefill_chunk: Optional[int] = None,
-                 prefix_cache: bool = True, block_size: int = 16,
-                 num_blocks: Optional[int] = None,
-                 async_readback: bool = True,
-                 speculative=None,
-                 preemption: str = "off",
-                 tracer: Optional[Tracer] = None,
-                 metrics: Optional[MetricsRegistry] = None) -> None:
+    def __init__(self, session: InferenceSession,
+                 num_slots: Optional[int] = None, *,
+                 config: Optional[SchedulerConfig] = None,
+                 **kwargs: Any) -> None:
         """Args:
           session: the :class:`InferenceSession` whose backend executes
             every dispatch; the scheduler only orchestrates.
-          num_slots: concurrent request slots — the batch width decode
-            cycles amortize dispatch overhead over.
-          continuous: ``True`` batches every cycle into ONE
-            ``decode_batch`` dispatch; ``False`` is the sequential
-            per-slot-dispatch baseline the amortization curve starts at.
-          kv_layout: ``"dense"`` (slot-major KV pool) or ``"paged"``
-            (block pool + radix prefix cache, see
-            :mod:`repro.serving.paging`).
-          prefill_chunk: paged only — prompt tokens prefilled per cycle,
-            interleaved with decode so long admissions never stall
-            running slots; ``None`` prefills whole prompts at once.
-          prefix_cache: paged only — radix-cache prompt prefixes so
-            shared spans skip prefill (see ``SchedulerStats.prefix_*``).
-          block_size: paged only — tokens per KV block (sharing/COW
-            granularity).
-          num_blocks: paged only — arena capacity in blocks; ``None``
-            sizes for worst-case occupancy plus prefix-cache slack.
-          async_readback: double-buffer device→host token readback in
-            steady state (identical token streams; savings in
-            ``SchedulerStats.overlap_*``).
-          speculative: draft/verify decoding — ``"ngram"``, a
-            :class:`~repro.serving.spec.SpeculativeConfig`, or a
-            :class:`~repro.serving.spec.Drafter`; paged layout only.
-          preemption: ``"off"`` | ``"swap"`` | ``"recompute"`` |
-            ``"auto"`` — oversubscription policy (paged layout only; see
-            the class docstring).  ``"swap"`` needs
-            ``capabilities.preemption``; ``"auto"`` degrades to
-            recompute when the backend cannot swap.
-          tracer: a :class:`repro.obs.Tracer` — scheduler/slot/paging
-            tracks plus the backend's dispatch lane feed one timeline.
-          metrics: a :class:`repro.obs.MetricsRegistry` — each ``run``
-            folds its stats in (``serving.*`` counters/histograms,
-            per-priority TTFT, SLO attainment); the traffic harness
-            sources its SLO numbers HERE, not from ad-hoc timers.
+          config: a :class:`SchedulerConfig` carrying every policy knob —
+            the ONE configuration surface (see its docstring for the
+            per-field semantics).
+          num_slots / **kwargs: DEPRECATED per-field construction
+            (``Scheduler(session, 4, kv_layout="paged", ...)``).  The
+            kwargs simply populate a ``SchedulerConfig`` — same fields,
+            same validation, same error messages — and cannot be mixed
+            with ``config=``.  Prefer passing a config; the kwargs path
+            remains for the historical call sites.
         """
-        if num_slots < 1:
-            raise ValueError("num_slots must be >= 1")
-        if kv_layout not in ("dense", "paged"):
-            raise ValueError(f"unknown kv_layout {kv_layout!r}")
-        if kv_layout == "paged" and not continuous:
-            raise ValueError("paged KV requires the continuous scheduler")
-        if prefill_chunk is not None and prefill_chunk < 1:
-            raise ValueError("prefill_chunk must be >= 1")
-        if preemption not in ("off", "swap", "recompute", "auto"):
-            raise ValueError(f"unknown preemption {preemption!r}")
-        if preemption != "off" and kv_layout != "paged":
-            raise ValueError(
-                "preemption requires kv_layout='paged' (victim state moves "
-                "as block chains; the dense pool has nothing to swap)")
-        if speculative is not None:
-            if kv_layout != "paged":
+        if config is not None:
+            if num_slots is not None or kwargs:
                 raise ValueError(
-                    "speculative decoding requires kv_layout='paged' (the "
-                    "COW block-fork rollback lives in the paging arena)")
-            if isinstance(speculative, (str, Drafter)):
-                speculative = SpeculativeConfig(drafter=speculative)
-            elif not isinstance(speculative, SpeculativeConfig):
-                raise ValueError(
-                    "speculative must be a drafter name, a Drafter, or a "
-                    f"SpeculativeConfig; got {type(speculative).__name__}")
-        self._spec: Optional[SpeculativeConfig] = speculative
+                    "pass either config= or the per-field kwargs, not both")
+        else:
+            if num_slots is not None:
+                kwargs["num_slots"] = num_slots
+            config = SchedulerConfig(**kwargs)
+        self.config = config
+        self._spec: Optional[SpeculativeConfig] = config.speculative
         self._drafter: Optional[Drafter] = None
         self.session = session
-        self.num_slots = num_slots
-        self.continuous = continuous
-        self.kv_layout = kv_layout
-        self.prefill_chunk = prefill_chunk
-        self.prefix_cache = prefix_cache
-        self.block_size = block_size
-        self.num_blocks = num_blocks
-        self.async_readback = async_readback
-        self.preemption = preemption
+        self.num_slots = config.num_slots
+        self.continuous = config.continuous
+        self.kv_layout = config.kv_layout
+        self.prefill_chunk = config.prefill_chunk
+        self.prefix_cache = config.prefix_cache
+        self.block_size = config.block_size
+        self.num_blocks = config.num_blocks
+        self.async_readback = config.async_readback
+        self.preemption = config.preemption
+        self.decode_horizon = config.decode_horizon
         self._queue: List[ServeRequest] = []
         self._future: List[Tuple[float, int, ServeRequest]] = []  # heap
         self._preempted: List[Dict[str, Any]] = []   # evicted, awaiting slot
@@ -673,8 +747,9 @@ class Scheduler:
         self._ewma_upload_s_per_block: Optional[float] = None
         self._bstate: Optional[Dict[str, Any]] = None
         self.last_stats: Optional[SchedulerStats] = None
-        self.tracer = tracer if tracer is not None else NULL_TRACER
-        self.metrics = metrics
+        self.tracer = (config.tracer if config.tracer is not None
+                       else NULL_TRACER)
+        self.metrics = config.metrics
         if self.tracer.enabled:
             # one accounting source: the backend's _record choke point
             # emits the dispatch-lane spans the CI consistency gate sums
@@ -741,6 +816,7 @@ class Scheduler:
         st = SchedulerStats(num_slots=self.num_slots,
                             continuous=self.continuous,
                             kv_layout=self.kv_layout,
+                            decode_horizon=self.decode_horizon,
                             speculative=self._drafter_name())
         backend = self.session.backend
         d0 = backend.dispatch_stats().dispatches
@@ -915,6 +991,133 @@ class Scheduler:
         return self._retire_cycle(out, slots, active, results, bstate, st,
                                   overlapped=False)
 
+    # -- multi-step decode capture (decode_horizon > 1) ------------------
+    def _multi_ok(self, active: Dict[int, "_Active"]) -> bool:
+        """Multi-step eligibility: the super-step samples on device, so
+        every active slot must be greedy token-readback with no stream
+        callback.  Stop tokens ARE allowed — the on-device stop table plus
+        retire-time reconciliation handle them."""
+        return (self.decode_horizon > 1
+                and self.session.backend.capabilities.decode_multi
+                and all(a.req.sampler.kind == "greedy"
+                        and a.req.readback == "token"
+                        and a.req.stream is None
+                        for a in active.values()))
+
+    def _multi_horizon(self, active: Dict[int, "_Active"]) -> int:
+        """Clip the configured horizon to the tightest remaining token
+        budget so no slot can overrun ``max_new_tokens`` mid-capture."""
+        rem = min(a.req.max_new_tokens - len(a.tokens)
+                  for a in active.values())
+        return min(self.decode_horizon, rem)
+
+    def _stop_table(self, active: Dict[int, "_Active"]
+                    ) -> Optional[np.ndarray]:
+        """(num_slots, W) int32 stop-token table for the on-device stop
+        check; −1 pads (never a vocab id).  ``None`` when no active
+        request declares stop tokens."""
+        width = max((len(a.req.stop_tokens) for a in active.values()),
+                    default=0)
+        if width == 0:
+            return None
+        tbl = np.full((self.num_slots, width), -1, np.int32)
+        for s, a in active.items():
+            if a.req.stop_tokens:
+                tbl[s, :len(a.req.stop_tokens)] = a.req.stop_tokens
+        return tbl
+
+    def _issue_multi(self, bstate, active: Dict[int, "_Active"],
+                     st: SchedulerStats, tokens, horizon: int, stop_table,
+                     *, overlapped: bool = False):
+        """ONE host submission advancing every active slot ``horizon``
+        decode cycles (``backend.decode_multi``)."""
+        slots = tuple(sorted(active))
+        with self.tracer.span("decode_cycle", track="scheduler",
+                              cycle=st.cycles, occupancy=len(slots),
+                              horizon=horizon, multi=True,
+                              overlapped=overlapped):
+            bstate, out = self.session.backend.decode_multi(
+                bstate, tokens, slots, horizon=horizon,
+                stop_table=stop_table)
+        st.cycles += 1
+        st.multi_cycles += 1
+        st.occupancy_sum += len(slots)
+        if overlapped:
+            st.overlap_cycles += 1
+        self._track_kv(bstate, st)
+        return bstate, slots, out
+
+    def _retire_multi(self, out, slots, active, results, bstate,
+                      st: SchedulerStats, *, overlapped: bool):
+        """Read one super-step's (slots, horizon) token block back and
+        replay it through the per-request emission path.  ``valid`` masks
+        columns past each row's stop token, so reconciliation is a
+        host-side truncation — nothing past a stop is ever emitted.  A
+        finishing paged slot's published position is clamped to the
+        sampling boundary before release: the device may have early-exited
+        before feeding the final token back, so only ``len(seq) - 1``
+        positions are guaranteed-valid KV (exactly the single-step radix
+        insert rule)."""
+        backend = self.session.backend
+        tr = self.tracer
+        t0 = time.perf_counter()
+        toks = np.asarray(out.tokens, np.int32)   # ONE readback per N steps
+        valid = np.asarray(out.valid, bool)
+        dt = time.perf_counter() - t0
+        tr.add("readback", t0, dt, cat="phase", track="scheduler",
+               args={"overlapped": overlapped, "multi": True})
+        if overlapped:
+            st.overlap_readback_s += dt
+        else:
+            st.sync_readback_s += dt
+        horizon = toks.shape[1]
+        with tr.span("sample_emit", track="scheduler", slots=len(slots),
+                     horizon=horizon):
+            for s in slots:
+                a = active[s]
+                done = False
+                for i in range(horizon):
+                    if not valid[s, i]:
+                        break
+                    st.tokens += 1
+                    st.multi_tokens += 1
+                    done = self.session.step_row(
+                        a, StepOutput(None, toks[s:s + 1, i:i + 1]))
+                    if done:
+                        break
+                if done:
+                    seq = self._realized(a)
+                    if "paged" in bstate:
+                        bstate["paged"].pos[s] = len(seq) - 1
+                    results[a.req.request_id] = self.session.finish(a)
+                    bstate = backend.release_slot(bstate, s, tokens=seq)
+                    tr.instant("release", track=f"slot{s}",
+                               req=a.req.request_id, n_new=len(a.tokens))
+                    del active[s]
+        return bstate
+
+    def _drain_multi(self, bstate, out, slots, active, results,
+                     st: SchedulerStats, horizon: int):
+        """Double-buffered super-steps: issue super-step N+1 from the last
+        on-device token column of super-step N, THEN retire N overlapped —
+        the multi-step analogue of ``_drain_async``.  Requires the
+        stop-free steady state (``_async_safe``): with stop tokens a row
+        may end mid-horizon, making the last column the wrong next
+        input."""
+        while (self.async_readback
+               and not self._future      # open-loop arrivals poll per step
+               and self._async_safe(active)
+               and all(len(active[s].tokens) + 2 * horizon
+                       <= active[s].req.max_new_tokens for s in slots)):
+            bstate, _, out_next = self._issue_multi(
+                bstate, active, st, out.tokens[:, -1:], horizon, None,
+                overlapped=True)
+            bstate = self._retire_multi(out, slots, active, results,
+                                        bstate, st, overlapped=True)
+            out = out_next
+        return self._retire_multi(out, slots, active, results, bstate, st,
+                                  overlapped=False)
+
     # -- continuous batching (the production path) ----------------------
     def _run_continuous(self, st: SchedulerStats) -> Dict[str, ServeResult]:
         backend = self.session.backend
@@ -943,6 +1146,14 @@ class Scheduler:
                 a.state = None               # KV now lives in the slot pool
                 active[slot] = a
             if not active:
+                continue
+            horizon = self._multi_horizon(active)
+            if horizon > 1 and self._multi_ok(active):
+                bstate, slots, out = self._issue_multi(
+                    bstate, active, st, self._host_tokens(active), horizon,
+                    self._stop_table(active))
+                bstate = self._drain_multi(bstate, out, slots, active,
+                                           results, st, horizon)
                 continue
             bstate, slots, out = self._issue_cycle(
                 bstate, active, st, self._host_tokens(active))
@@ -1205,17 +1416,10 @@ class Scheduler:
     def _run_paged(self, st: SchedulerStats) -> Dict[str, ServeResult]:
         backend = self.session.backend
         caps = backend.capabilities
-        if not caps.paged_kv:
-            hint = (f" (state_kind={caps.state_kind!r}: constant-size "
-                    "recurrent slots have nothing to page)"
-                    if caps.state_kind == "recurrent" else "")
-            raise ValueError(
-                f"backend {caps.name!r} has no paged-KV "
-                f"support{hint}; use kv_layout='dense'")
-        if self._spec is not None and not caps.speculative:
-            raise ValueError(
-                f"backend {caps.name!r} has no speculative "
-                "verify; drop speculative= or use the model backend")
+        caps.require("paged_kv", hint="use kv_layout='dense'")
+        if self._spec is not None:
+            caps.require("speculative",
+                         hint="drop speculative= or use the model backend")
         if self._bstate is None:
             self._bstate = backend.alloc_slots_paged(
                 self.num_slots, block_size=self.block_size,
@@ -1308,6 +1512,23 @@ class Scheduler:
                 # accept decision needs the verified tokens on the host
                 # before the next span can be drafted
                 bstate = self._spec_cycle(bstate, active, results, st)
+                continue
+            # a super-step holds the host for N cycles' worth of device
+            # work, so anything needing per-cycle scheduling decisions
+            # (mid-prefill chunks, scheduled arrivals, preemption checks,
+            # admissions into free slots) keeps the per-cycle path — the
+            # same states the async drain below stays synchronous for
+            horizon = self._multi_horizon(active)
+            if (horizon > 1 and self._multi_ok(active)
+                    and not (prefilling or self._future or self._preempted
+                             or (self._queue
+                                 and (len(active) < self.num_slots
+                                      or self.preemption != "off")))):
+                bstate, slots, out = self._issue_multi(
+                    bstate, active, st, self._host_tokens(active), horizon,
+                    self._stop_table(active))
+                bstate = self._drain_multi(bstate, out, slots, active,
+                                           results, st, horizon)
                 continue
             bstate, slots, out = self._issue_cycle(
                 bstate, active, st, self._host_tokens(active))

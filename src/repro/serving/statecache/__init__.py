@@ -9,7 +9,9 @@
 """
 from repro.serving.statecache.base import StateCache, tree_bytes
 from repro.serving.statecache.recurrent import RecurrentStateCache
-from repro.serving.statecache.slotkv import SlotKVCache, empty_graph_cache
+from repro.serving.statecache.slotkv import (SlotKVCache, empty_graph_cache,
+                                             graph_to_stacked, load_prefix,
+                                             stacked_to_graph)
 
 __all__ = [
     "StateCache",
@@ -17,4 +19,7 @@ __all__ = [
     "SlotKVCache",
     "RecurrentStateCache",
     "empty_graph_cache",
+    "load_prefix",
+    "stacked_to_graph",
+    "graph_to_stacked",
 ]

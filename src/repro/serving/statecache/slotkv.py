@@ -9,7 +9,7 @@ is ``serving/paging``; the constant-size recurrent twin is
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,43 @@ def empty_graph_cache(cfg: ModelConfig, batch: int, max_len: int
         out[f"k_cache_{i}"] = jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dt)
         out[f"v_cache_{i}"] = jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dt)
     return out
+
+
+# -- layout bridges: model cache (stacked layer axis) ↔ graph inputs --------
+
+def load_prefix(graph_cache: Dict[str, jax.Array],
+                prefill_out: Dict[str, Any],
+                num_layers: int) -> Dict[str, jax.Array]:
+    """Write prefill K/V prefixes (B, prompt, KV, hd) into max_len caches."""
+    out = dict(graph_cache)
+    for i in range(num_layers):
+        kp, vp = prefill_out[f"k_prefix_{i}"], prefill_out[f"v_prefix_{i}"]
+        out[f"k_cache_{i}"] = jax.lax.dynamic_update_slice(
+            out[f"k_cache_{i}"], kp.astype(out[f"k_cache_{i}"].dtype),
+            (0, 0, 0, 0))
+        out[f"v_cache_{i}"] = jax.lax.dynamic_update_slice(
+            out[f"v_cache_{i}"], vp.astype(out[f"v_cache_{i}"].dtype),
+            (0, 0, 0, 0))
+    return out
+
+
+def stacked_to_graph(cache: Dict[str, jax.Array], num_layers: int
+                     ) -> Dict[str, jax.Array]:
+    """Model cache {"k": (L,B,S,KV,hd), ...} → per-layer graph inputs."""
+    out: Dict[str, jax.Array] = {}
+    for i in range(num_layers):
+        out[f"k_cache_{i}"] = cache["k"][i]
+        out[f"v_cache_{i}"] = cache["v"][i]
+    return out
+
+
+def graph_to_stacked(inputs: Dict[str, jax.Array], num_layers: int,
+                     pos) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.stack([inputs[f"k_cache_{i}"] for i in range(num_layers)]),
+        "v": jnp.stack([inputs[f"v_cache_{i}"] for i in range(num_layers)]),
+        "pos": jnp.asarray(pos, jnp.int32),
+    }
 
 
 @functools.partial(jax.jit, static_argnums=2, donate_argnums=0)

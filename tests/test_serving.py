@@ -13,7 +13,6 @@ from repro.configs.bench import BENCH_05B
 from repro.models import build_model
 from repro.serving import (InferenceSession, Scheduler, ServeRequest,
                            SlotKVCache, create_backend)
-from repro.serving.engine import GenerationEngine
 from repro.serving.sampler import SamplerConfig, sample
 
 
@@ -26,39 +25,43 @@ def setup():
     return model, params, prompt
 
 
+def _serve(model, params, mode, prompt, n_new, readback="token"):
+    session = InferenceSession(create_backend(mode, model, params, batch=1,
+                                              max_len=32))
+    return session.run(ServeRequest(prompt=prompt, max_new_tokens=n_new,
+                                    readback=readback))
+
+
 @pytest.mark.parametrize("mode", ["F0", "F3", "F4", "FULL", "model",
                                   "ondevice"])
 def test_modes_generate_identical_tokens(setup, mode):
     model, params, prompt = setup
-    ref = GenerationEngine(model, params, mode="model", batch=1,
-                           max_len=32).generate(prompt, 8)
-    eng = GenerationEngine(model, params, mode=mode, batch=1, max_len=32)
-    out = eng.generate(prompt, 8)
+    ref = _serve(model, params, "model", prompt, 8)
+    out = _serve(model, params, mode, prompt, 8)
     np.testing.assert_array_equal(out.tokens, ref.tokens)
     assert out.ttft_s > 0 and out.total_s >= out.ttft_s
 
 
 def test_dispatch_counts_ordered(setup):
     model, params, prompt = setup
-    d = {m: GenerationEngine(model, params, mode=m, batch=1,
-                             max_len=32).dispatches_per_token
+    d = {m: create_backend(m, model, params, batch=1, max_len=32)
+         .capabilities.dispatches_per_token
          for m in ("F0", "F3", "FULL")}
     assert d["F0"] > d["F3"] > d["FULL"]
 
 
 def test_logits_readback_mode_same_tokens(setup):
     model, params, prompt = setup
-    t1 = GenerationEngine(model, params, mode="F3", batch=1, max_len=32,
-                          readback="token").generate(prompt, 6).tokens
-    t2 = GenerationEngine(model, params, mode="F3", batch=1, max_len=32,
-                          readback="logits").generate(prompt, 6).tokens
+    t1 = _serve(model, params, "F3", prompt, 6, readback="token").tokens
+    t2 = _serve(model, params, "F3", prompt, 6, readback="logits").tokens
     np.testing.assert_array_equal(t1, t2)
 
 
 def test_benchmark_protocol(setup):
     model, params, prompt = setup
-    eng = GenerationEngine(model, params, mode="model", batch=1, max_len=32)
-    rep = eng.benchmark(prompt, 6, n_runs=3, warmup=1)
+    session = InferenceSession(create_backend("model", model, params,
+                                              batch=1, max_len=32))
+    rep = session.benchmark(prompt, 6, n_runs=3, warmup=1)
     assert rep.tok_per_s.n == 3
     assert rep.tok_per_s.mean > 0
     row = rep.row()
